@@ -1,0 +1,49 @@
+"""Paper Fig. 5: 5000-point Monte-Carlo variation analysis + array
+scalability vs HRS/LRS ratio.
+
+Reports: SL-current distributions per input state (Fig. 5(c)), n_CELL/n_REF
+node-voltage spreads (Fig. 5(d)), XOR error rates under variation, worst-case
+sense margins, and max-rows vs on/off ratio (Fig. 5(b)).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import montecarlo
+
+
+def run() -> list[tuple]:
+    rows = []
+    t0 = time.perf_counter()
+    res = montecarlo.run(jax.random.PRNGKey(0), samples=5000, rows=3)
+    jax.block_until_ready(res.i_sl)
+    dt = (time.perf_counter() - t0) * 1e6
+
+    i = np.asarray(res.i_sl)
+    for si, name in enumerate(["00", "01", "11"]):
+        rows.append((f"fig5c_I_{name}", dt / 3,
+                     f"mean={i[:, si].mean()*1e6:.4f}uA "
+                     f"std={i[:, si].std()*1e6:.4f}uA "
+                     f"err={float(res.error_rate[si]):.5f}"))
+    v = np.asarray(res.v_cell)
+    rows.append(("fig5d_vcell", 0.0,
+                 f"V(01)={v[:,1].mean()*1e3:.1f}±{v[:,1].std()*1e3:.2f}mV "
+                 f"V(11)={v[:,2].mean()*1e3:.1f}±{v[:,2].std()*1e3:.2f}mV"))
+    m = np.asarray(res.margins)
+    rows.append(("fig5_margins", 0.0,
+                 f"min_lo={m[:,0].min()*1e6:.2f}uA min_hi={m[:,1].min()*1e6:.2f}uA"))
+
+    t0 = time.perf_counter()
+    ratios = jnp.array([1e4, 3e4, 1e5, 3e5, 3e9 / 1e4])
+    mr_lrs = np.asarray(montecarlo.max_rows_sweep(ratios, vary="lrs"))
+    mr_hrs = np.asarray(montecarlo.max_rows_sweep(ratios, vary="hrs"))
+    dt = (time.perf_counter() - t0) * 1e6
+    for r, a, b in zip(np.asarray(ratios), mr_lrs, mr_hrs):
+        rows.append((f"fig5b_ratio_{r:.0e}", dt / len(mr_lrs),
+                     f"max_rows(vary_lrs)={int(a)} max_rows(vary_hrs)={int(b)}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 6: XNOR-Net application-level speedup vs N_O (XNOR ops per
+cycle), comparing the paper's 1-cycle design against 2- and 3-cycle prior
+work and against this framework's TPU packed-lane bit-engine, plus the
+XOR-Net variant ([36]).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import speedup
+
+
+def run() -> list[tuple]:
+    rows = []
+    n_os = [64, 256, 1024, 4096, 16384, 65536]
+    for n_o in n_os:
+        s1 = float(speedup.xnornet_speedup(n_o))          # 1-cycle (ours)
+        s2 = float(speedup.xnornet_speedup(n_o / 2))      # 2-cycle designs
+        s3 = float(speedup.xnornet_speedup(n_o / 3))      # 3-cycle designs
+        sx = float(speedup.xornet_speedup(n_o))
+        rows.append((f"fig6_NO_{n_o}", 0.0,
+                     f"S_1cyc={s1:.1f} S_2cyc={s2:.1f} S_3cyc={s3:.1f} "
+                     f"S_xornet={sx:.1f} vs_cpu64={s1/63.92:.2f}x"))
+    tpu = speedup.tpu_n_o()
+    rows.append(("fig6_tpu_bit_engine", 0.0,
+                 f"N_O={tpu} S={float(speedup.xnornet_speedup(tpu)):.0f} "
+                 f"(paper eq. with packed VPU lanes)"))
+    # alternate parameter reading (N_W=3x3 filters, N_I=14x14 maps)
+    s_alt = float(speedup.xnornet_speedup(tpu, c=256, n_w=9, n_i=196))
+    rows.append(("fig6_tpu_alt_params", 0.0,
+                 f"S={s_alt:.0f} with (N_W, N_I) swapped reading"))
+    return rows

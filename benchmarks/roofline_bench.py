@@ -1,0 +1,33 @@
+"""Beyond-paper: summarize the dry-run roofline table (reads
+experiments/dryrun/*.json produced by repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run() -> list[tuple]:
+    rows = []
+    paths = sorted(glob.glob(os.path.join("experiments", "dryrun", "*.json")))
+    if not paths:
+        return [("roofline_table", 0.0,
+                 "no dry-run artifacts; run python -m repro.launch.dryrun")]
+    for p in paths:
+        r = json.load(open(p))
+        name = os.path.basename(p)[:-5]
+        if r.get("status") == "ok":
+            rows.append((name, r.get("t_compile_s", 0) * 1e6,
+                         f"bottleneck={r['bottleneck']} "
+                         f"t=({r['t_compute_s']*1e3:.1f},"
+                         f"{r['t_memory_s']*1e3:.1f},"
+                         f"{r['t_collective_s']*1e3:.1f})ms "
+                         f"useful={r.get('useful_flops_frac', 0)*100:.0f}% "
+                         f"roofline={r.get('roofline_frac', 0)*100:.1f}%"))
+        elif r.get("status") == "skipped":
+            rows.append((name, 0.0, "skipped: " + r.get("reason", "")[:60]))
+        else:
+            rows.append((name, 0.0, "ERROR " + r.get("error", "")[:80]))
+    return rows

@@ -1,0 +1,40 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (benchmarks read the paper's own artifacts: Fig. 4 functional
+# verification, Fig. 5 Monte-Carlo, Table I latency, Fig. 6 XNOR-Net
+# speedup, §II copy-verify/encrypt throughput, plus the beyond-paper
+# roofline summary from the dry-run).
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig4_functional, fig5_montecarlo, fig6_xnornet,
+                        roofline_bench, table1_latency, verify_throughput)
+
+SUITES = [
+    ("fig4", fig4_functional),
+    ("fig5", fig5_montecarlo),
+    ("table1", table1_latency),
+    ("fig6", fig6_xnornet),
+    ("verify", verify_throughput),
+    ("roofline", roofline_bench),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = 0
+    for tag, mod in SUITES:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{tag}/{name},{us:.1f},{derived}")
+        except Exception:
+            failed += 1
+            print(f"{tag}/ERROR,,{traceback.format_exc(limit=2)!r}",
+                  file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig. 1(a)+(b) at system scale: bulk copy with single-pass parity
+verification, corruption detection, and XOR-stream encryption — the
+checkpoint I/O path of the framework, exercised standalone.
+
+Run:  PYTHONPATH=src python examples/copy_verify_encrypt.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import cim, verify
+import jax.numpy as jnp
+
+# --- the circuit-level story: row copy + in-memory XOR verification ----------
+src_row = np.array([1, 0, 1, 1, 0, 0, 1, 0])
+arr = cim.make_array(jnp.zeros((2, 8)))
+for c, bit in enumerate(src_row):                      # program source row
+    arr = cim.write(arr, 0, c, int(bit))
+for c, bit in enumerate(src_row):                      # copy to row 1
+    arr = cim.write(arr, 1, c, int(bit))
+diff = np.asarray(cim.compute(arr, 0, 1, "xor"))
+print("circuit copy-verify (XOR of rows, all-zero = ok):",
+      diff.astype(int), "->", "OK" if not diff.any() else "CORRUPT")
+arr = cim.write(arr, 1, 3, int(1 - src_row[3]))        # corrupt one bit
+diff = np.asarray(cim.compute(arr, 0, 1, "xor"))
+print("after 1-bit corruption:", diff.astype(int), "-> flagged:",
+      bool(diff.any()))
+
+# --- the framework-level story: checkpoint shards -----------------------------
+rng = np.random.default_rng(0)
+tree = {"w1": rng.standard_normal((512, 256)).astype(np.float32),
+        "w2": rng.standard_normal((256, 512)).astype(np.float32)}
+
+with tempfile.TemporaryDirectory() as d:
+    ckpt.save(d, 1, tree, root_key="secret")           # encrypt + verify
+    ok, bad = ckpt.check(d, 1, root_key="secret")
+    print("checkpoint parity check after save:", "OK" if ok else bad)
+
+    # tamper one bit inside the (valid) container
+    path = f"{d}/ckpt_00000001.npz"
+    data = dict(np.load(path))
+    data["w1"].view(np.uint32)[7] ^= 1 << 3
+    with open(path, "wb") as f:
+        np.savez(f, **data)
+    ok, bad = ckpt.check(d, 1, root_key="secret")
+    print("after tampering one bit:", "OK" if ok else f"corrupt leaves={bad}")
+    assert not ok
+
+    # single-bit sensitivity of the digest itself (XOR linearity)
+    d0 = verify.np_digest(tree["w1"])
+    t2 = tree["w1"].copy()
+    t2.view(np.uint32).reshape(-1)[123] ^= 1 << 30   # one bit, one word
+    d1 = verify.np_digest(t2)
+    nbits = sum(int(x).bit_count() for x in np.bitwise_xor(d0, d1))
+    print(f"digest bits flipped by a 1-bit corruption: {nbits} (exactly 1)")
+    assert nbits == 1

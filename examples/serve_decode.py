@@ -1,0 +1,35 @@
+"""Batched serving example: prefill + resident-state decode across three
+architecture families (dense GQA, recurrent hybrid, enc-dec audio),
+demonstrating the same serve path the decode_* dry-run cells lower.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import lm
+from repro.train import serve_step
+
+for arch in ["qwen3-4b", "recurrentgemma-2b", "whisper-tiny"]:
+    cfg = configs.get(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    B, P, N = 4, 24, 12
+    prompt = jax.random.randint(key, (B, P), 0, cfg.vocab)
+    ctx = None
+    if cfg.n_ctx_tokens:
+        ctx = jax.random.normal(key, (B, cfg.n_ctx_tokens, cfg.d_model),
+                                jnp.float32) * 0.1
+    t0 = time.time()
+    out = serve_step.generate(cfg, params, prompt, N, ctx=ctx,
+                              temperature=0.8, key=key)
+    dt = time.time() - t0
+    print(f"{arch:20s} batch={B} prompt={P} +{N} tokens "
+          f"in {dt:5.1f}s -> sample row: {out[0][:8].tolist()}...")
+    assert out.shape == (B, N)
+    assert int(out.max()) < cfg.vocab
+print("serve path OK for dense / hybrid / enc-dec families")

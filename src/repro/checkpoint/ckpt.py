@@ -1,0 +1,155 @@
+"""Sharded checkpointing with the paper's two memory-side applications wired
+into the I/O path:
+
+* every leaf is saved with an **XOR-parity digest** (copy verification,
+  paper Fig. 1(a)): digests are computed before the write, stored in the
+  manifest, and re-checked after the write (write-verify) and on restore —
+  any single-bit corruption anywhere in a shard is detected;
+* optional **XOR stream encryption** (paper Fig. 1(b)): leaves are
+  encrypted with a counter-mode pad keyed by (root key, leaf path), so no
+  pad reuse across leaves or steps.
+
+Format: one ``.npz`` per host shard + a msgpack manifest
+(shapes/dtypes/digests/step).  Restore is mesh-shape-agnostic: leaves are
+addressed by tree path, so an elastic re-mesh (different device count)
+re-shards on load — index-free addressing is the elasticity story.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+from typing import Any
+
+import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+import numpy as np
+import jax
+import msgpack
+
+from repro.core import encrypt, verify
+
+
+def _coerce(raw: np.ndarray, dtype_str: str) -> np.ndarray:
+    """npz stores exotic dtypes (bfloat16) as void records; view them back."""
+    want = np.dtype(dtype_str)
+    if raw.dtype == want:
+        return raw
+    if raw.dtype.kind == "V" and raw.dtype.itemsize == want.itemsize:
+        return raw.view(want)
+    return raw
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(directory: str, step: int, tree, *, root_key: str | None = None,
+         verify_write: bool = True) -> dict:
+    """Write a checkpoint; returns the manifest (also written to disk)."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    manifest: dict[str, Any] = {"step": step, "leaves": {}, "encrypted":
+                                root_key is not None}
+    payload = {}
+    for key, arr in flat.items():
+        digest = verify.np_digest(arr)
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "digest": digest.tobytes().hex(),
+        }
+        buf = arr
+        if root_key is not None:
+            buf = encrypt.encrypt_np(arr, root_key, f"{step}/{key}")
+        payload[key.replace("/", "__")] = buf
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:      # file handle: atomic rename, no suffix
+        np.savez(f, **payload)      # munging from np.savez
+    os.replace(tmp, path)
+    with open(os.path.join(directory, f"manifest_{step:08d}.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+    if verify_write:  # read back and parity-check the copy (paper Fig. 1(a))
+        ok, bad = check(directory, step, root_key=root_key)
+        if not ok:
+            raise IOError(f"checkpoint write verification failed: {bad}")
+    return manifest
+
+
+def check(directory: str, step: int, *, root_key: str | None = None):
+    """Parity-verify a checkpoint on disk against its manifest."""
+    manifest = _load_manifest(directory, step)
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    bad = []
+    for key, meta in manifest["leaves"].items():
+        raw = data[key.replace("/", "__")]
+        if manifest["encrypted"]:
+            raw = encrypt.decrypt_np(raw, root_key, f"{step}/{key}",
+                                     np.dtype(meta["dtype"]),
+                                     tuple(meta["shape"]))
+        else:
+            raw = _coerce(raw, meta["dtype"])
+        digest = verify.np_digest(raw)
+        if digest.tobytes().hex() != meta["digest"]:
+            bad.append(key)
+    return (not bad), bad
+
+
+def restore(directory: str, step: int | None, like, *,
+            root_key: str | None = None, verify_read: bool = True):
+    """Load into the structure of ``like`` (abstract or concrete pytree)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    manifest = _load_manifest(directory, step)
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    bad = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        meta = manifest["leaves"][key]
+        raw = data[key.replace("/", "__")]
+        if manifest["encrypted"]:
+            raw = encrypt.decrypt_np(raw, root_key, f"{step}/{key}",
+                                     np.dtype(meta["dtype"]),
+                                     tuple(meta["shape"]))
+        else:
+            raw = _coerce(raw, meta["dtype"])
+        if verify_read:
+            if verify.np_digest(raw).tobytes().hex() != meta["digest"]:
+                bad.append(key)
+        arr = raw.reshape(meta["shape"])
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    if bad:
+        raise IOError(f"checkpoint corruption detected in leaves: {bad}")
+    return jax.tree_util.tree_unflatten(tdef, leaves), step
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def _load_manifest(directory: str, step: int) -> dict:
+    with open(os.path.join(directory, f"manifest_{step:08d}.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())

@@ -1,0 +1,17 @@
+"""Llama-3.2-11B-Vision [hf:meta-llama; unverified]: cross-attn image layers.
+
+Backbone only (assignment): 40 layers, every 5th a vision cross-attention
+layer (8 cross-attn layers over a Llama-3.1-8B-class trunk).  The vision
+tower is a STUB: input_specs() feeds precomputed patch embeddings
+(n_ctx_tokens x d_model).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=128256,
+    pattern=("attn", "attn", "attn", "attn", "cross"),
+    n_ctx_tokens=1600,
+    rope_theta=500000.0,
+)

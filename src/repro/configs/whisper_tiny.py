@@ -1,0 +1,17 @@
+"""Whisper-tiny [arXiv:2212.04356; unverified]: enc-dec, conv frontend stub.
+
+4-layer encoder over precomputed frame embeddings (the strided-conv audio
+frontend is a STUB per the assignment: input_specs() provides
+(batch, 1500, d_model) frames), 4-layer decoder with cross-attention.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865,
+    pattern=("dec",),
+    encoder_layers=4, n_ctx_tokens=1500,
+    rope_theta=10000.0,
+    notes="enc-dec; decoder cross-attends to 1500 encoder frames.",
+)

@@ -1,0 +1,105 @@
+"""Bit-plane packing: the data layout of the in-memory XOR engine.
+
+The paper stores operands as rows of single-bit cells and computes a whole
+row of XOR/XNOR per sense cycle.  On TPU the analogous layout is *bit-plane
+packing*: 32 binary values per ``uint32`` lane, so one VPU int-op performs 32
+bit-ops and one 8x128 vreg performs 32,768.  All bit-domain kernels
+(:mod:`repro.kernels`) consume this layout.
+
+Conventions
+-----------
+* A "bit" encodes the sign of a real value: ``bit = 1  <=>  x >= 0`` (i.e.
+  ``x -> +1``), ``bit = 0 <=> x < 0`` (``x -> -1``).  This is the XNOR-Net
+  binarization.
+* Packing runs along the *last* axis, LSB-first within each 32-bit word:
+  word ``w`` holds source positions ``32*w .. 32*w+31``; bit ``j`` of word
+  ``w`` is source position ``32*w + j``.
+* ``K`` (the unpacked length) must be a multiple of 32 for the packed kernels;
+  :func:`pad_to_word` pads with an encoding that contributes zero to XNOR
+  dot products when both operands share the padding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+_SHIFTS = jnp.arange(WORD, dtype=jnp.uint32)
+
+
+def packed_width(k: int) -> int:
+    """Number of uint32 words needed for ``k`` bits."""
+    return (k + WORD - 1) // WORD
+
+
+def pad_to_word(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of 32.
+
+    Zero pads binarize to ``+1`` under the ``x >= 0`` rule; XNOR dot products
+    of two padded operands pick up ``+1 * +1`` contributions per pad slot,
+    which callers must subtract (``xnor_dot`` handles this via ``valid_k``).
+    """
+    k = x.shape[axis]
+    pad = (-k) % WORD
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis % x.ndim] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack the sign bits of ``x`` along its last axis into uint32 planes.
+
+    ``x``: (..., K) real or boolean, K % 32 == 0.
+    Returns (..., K // 32) uint32.
+    """
+    k = x.shape[-1]
+    if k % WORD != 0:
+        raise ValueError(f"last axis {k} not a multiple of {WORD}; pad first")
+    if x.dtype == jnp.bool_:
+        bits = x
+    else:
+        bits = x >= 0
+    bits = bits.reshape(*x.shape[:-1], k // WORD, WORD).astype(jnp.uint32)
+    return jnp.bitwise_or.reduce(bits << _SHIFTS, axis=-1)
+
+
+def unpack_bits(p: jnp.ndarray, k: int | None = None, signed: bool = True,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`.
+
+    Returns ±1 values (``signed=True``) or {0,1} (``signed=False``) of shape
+    (..., k); ``k`` defaults to the full packed width * 32.
+    """
+    full = p.shape[-1] * WORD
+    k = full if k is None else k
+    bits = (p[..., :, None] >> _SHIFTS) & jnp.uint32(1)
+    bits = bits.reshape(*p.shape[:-1], full)[..., :k]
+    if signed:
+        return (2 * bits.astype(jnp.int32) - 1).astype(dtype)
+    return bits.astype(dtype)
+
+
+def binarize(x: jnp.ndarray):
+    """XNOR-Net binarization of the last axis.
+
+    Returns ``(packed_bits, alpha)`` where ``alpha = mean(|x|)`` along the
+    last axis is the XNOR-Net scaling factor, so
+    ``x ~= alpha[..., None] * unpack_bits(packed_bits)``.
+    """
+    xp = pad_to_word(x)
+    alpha = jnp.mean(jnp.abs(x), axis=-1)
+    return pack_bits(xp), alpha.astype(jnp.float32)
+
+
+def binarize_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through-estimator sign(x) in the *unpacked* domain.
+
+    Forward: sign(x) (with sign(0) = +1).  Backward: identity inside
+    |x| <= 1, zero outside (the XNOR-Net / BNN clipped STE).
+    """
+    s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    clip = (jnp.abs(x) <= 1.0).astype(x.dtype)
+    return x * clip + jax.lax.stop_gradient(s - x * clip)

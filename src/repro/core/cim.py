@@ -1,0 +1,127 @@
+"""Behavioral circuit simulator for the paper's CiM array (paper §III–IV).
+
+This is the *faithful reproduction* layer: a phenomenological model of the
+ReRAM array + modified peripheral sensing of Fig. 2, calibrated to the
+paper's reported operating points:
+
+* Cu/HfO2/Pt ReRAM: LRS = 10 kOhm, HRS = 3 GOhm  (paper §III)
+* BL precharge V_BL = 100 mV                      (paper §IV)
+* accessed-cell currents: I(LRS) = 7.85 uA  => series access-FET resistance
+  R_ACC = V/I - LRS = 2.74 kOhm; I(HRS) = 33 pA. Two accessed cells sum on
+  the sense line: I_11 = 15.7 uA, I_01 = 7.87 uA, I_00 ~ 0.1 nA including
+  one unaccessed-row leak — all matching Fig. 4(d).
+* unaccessed-cell leakage (WL low): 774 pA (LRS), 28 pA (HRS) — paper §V.
+  Modeled as state-dependent constants (the paper reports them as such; a
+  single off-resistance cannot reproduce both, see DESIGN.md §8).
+
+Everything is pure JAX: the Monte-Carlo layer ``vmap``s these functions over
+thousands of sampled (LRS, HRS, V_t) worlds.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import logic
+
+# --- calibrated constants (SI units) ---------------------------------------
+V_BL = 0.1                    # bit-line precharge (V)
+LRS = 10e3                    # low-resistance state (Ohm)
+HRS = 3e9                     # high-resistance state (Ohm)
+R_ACC = V_BL / 7.85e-6 - LRS  # access-FET on-resistance ~ 2.74 kOhm
+LEAK_LRS = 774e-12            # unaccessed LRS leakage (A)
+LEAK_HRS = 28e-12             # unaccessed HRS leakage (A)
+# CSA small-signal model for node-voltage histograms (Fig. 5(d)):
+R_MIRROR = 12e3               # current-mirror load: V_node = I * R_MIRROR
+# V_t variation couples into sensing as an equivalent reference shift.
+# The CSA the paper builds on (Chang et al. [27]) is *offset-tolerant*
+# (current-sampling cancels static offset); the residual coupling is modeled
+# with an effective overdrive of 0.5 V => gm/I = 2 /V.  With sigma_Vt = 25 mV
+# this leaves > 6 sigma of margin on the tightest (I_11 vs REF2) boundary,
+# consistent with the paper's "well-distinguishable under 5000-pt MC".
+GM_OVER_I = 2.0
+
+
+class ArrayState(NamedTuple):
+    """A CiM array: per-cell resistance + optional per-cell leak currents."""
+    r: jnp.ndarray           # (rows, cols) resistance, Ohm
+    leak_lrs: jnp.ndarray    # scalar or broadcastable leakage constants
+    leak_hrs: jnp.ndarray
+
+
+def make_array(bits: jnp.ndarray, lrs: float | jnp.ndarray = LRS,
+               hrs: float | jnp.ndarray = HRS,
+               leak_lrs=LEAK_LRS, leak_hrs=LEAK_HRS) -> ArrayState:
+    """Program an array from a (rows, cols) 0/1 matrix ('1' -> LRS)."""
+    r = jnp.where(bits.astype(bool), lrs, hrs)
+    return ArrayState(r, jnp.asarray(leak_lrs), jnp.asarray(leak_hrs))
+
+
+def write(state: ArrayState, row: int, col: int, bit) -> ArrayState:
+    """Memory-mode write: bias WL/BL so the addressed cell switches state.
+
+    (paper Fig. 3: +0.4 V BL writes '1' (-> LRS), -0.15 V writes '0' (-> HRS);
+    half-accessed cells see sub-threshold bias and keep their state — here
+    that invariant holds by construction since only (row, col) is updated.)
+    """
+    new_r = jnp.where(jnp.asarray(bit, bool), LRS, HRS)
+    return state._replace(r=state.r.at[row, col].set(new_r))
+
+
+def sl_currents(state: ArrayState, wl_mask: jnp.ndarray) -> jnp.ndarray:
+    """Sense-line current per column for a given word-line assertion mask.
+
+    Accessed rows contribute V_BL / (R_cell + R_ACC); unaccessed rows leak
+    their state-dependent constant.  This is the analog summation the paper
+    exploits — on the SL, currents add, so the column-wise result is
+    data-parallel across the whole row width (the paper's bulk parallelism).
+    """
+    accessed = wl_mask.astype(bool)[:, None]
+    i_on = V_BL / (state.r + R_ACC)
+    is_lrs = state.r < (LRS + HRS) / 2
+    i_leak = jnp.where(is_lrs, state.leak_lrs, state.leak_hrs)
+    return jnp.sum(jnp.where(accessed, i_on, i_leak), axis=0)
+
+
+def compute(state: ArrayState, row_a: int, row_b: int, op: str = "xor",
+            offset1=0.0, offset2=0.0) -> jnp.ndarray:
+    """Single-cycle in-memory Boolean op between two rows (all columns).
+
+    Asserts both word lines, senses each column's SL current through the
+    dual-reference datapath of Fig. 2(c).  One sense cycle, row-wide.
+    """
+    wl = jnp.zeros(state.r.shape[0], bool).at[row_a].set(True).at[row_b].set(True)
+    i_sl = sl_currents(state, wl)
+    spec = logic.op_table()[op]
+    return logic.sense_datapath(i_sl, spec, offset1, offset2)
+
+
+# Memory-mode read uses the same SA with single-access references
+# (paper §IV: "only one cell is accessed and reference current levels are
+# different").  One accessed cell: I in {33 pA (HRS), 7.85 uA (LRS)}.
+READ_REF = 4e-6
+
+
+def read(state: ArrayState, row: int, offset=0.0) -> jnp.ndarray:
+    wl = jnp.zeros(state.r.shape[0], bool).at[row].set(True)
+    i_sl = sl_currents(state, wl)
+    return i_sl > (READ_REF + offset)
+
+
+def node_voltages(i_cell: jnp.ndarray, i_ref: jnp.ndarray):
+    """CSA internal nodes (Fig. 5(e)): mirror converts current to voltage."""
+    return i_cell * R_MIRROR, i_ref * R_MIRROR
+
+
+def vt_offset_to_iref_shift(delta_vt: jnp.ndarray, i_ref: float) -> jnp.ndarray:
+    """Map comparator V_t mismatch to an equivalent reference-current shift.
+
+    Small-signal: dI = gm * dV = (gm/I) * I_ref * dVt.  With gm/I ~ 5 /V a
+    25 mV sigma shifts the effective reference by ~12.5% of I_ref — the
+    dominant variation term, consistent with the paper's finding that the
+    margins (uA-scale) dwarf resistance spread but V_t matters.
+    """
+    return delta_vt * GM_OVER_I * i_ref

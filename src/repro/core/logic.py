@@ -1,0 +1,78 @@
+"""Reference-current -> Boolean-operation selection (paper §III, Fig. 2(b)).
+
+The paper's modified sense amplifier feeds the sense-line current into two
+CSAs with references REF1/REF2 and combines their outputs with one inverter
++ one AND gate.  Because the SL current is monotone in the number of '1'
+cells among the two accessed ones (s = a + b in {0, 1, 2}), placing the two
+references relative to {I_00, I_01, I_11} makes the AND-of-comparators an
+*interval* predicate on s — XOR is the interval s == 1, AND is s == 2,
+OR is s >= 1.  Complement ops (XNOR/NAND/NOR) use the CSA's complementary
+output rail (the latched CSA of Fig. 2(d) produces OUT and OUT_B in the
+same cycle, so complementing is free — still single-cycle).
+
+This module is the digital twin of that mechanism and the functional spec
+the circuit simulator (:mod:`repro.core.cim`) is tested against.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class OpSpec(NamedTuple):
+    """Reference placement (amps) + output-rail selection for one Boolean op."""
+    name: str
+    ref1: float          # CSA1 reference current (A)
+    ref2: float          # CSA2 reference current (A)
+    invert_out: bool     # take OUT_B of the final AND (complementary rail)
+
+
+# Nominal current levels for the calibrated array (paper Fig. 4(d)):
+I_00 = 100e-12   # both accessed cells HRS ('0','0') + nominal leakage
+I_01 = 7.87e-6   # one LRS ('0','1' / '1','0')
+I_11 = 15.7e-6   # both LRS ('1','1')
+
+# References exactly as the paper sets them (XOR: 4 uA / 12 uA).
+REF_LO = 4e-6    # in (I_00, I_01)
+REF_HI = 12e-6   # in (I_01, I_11)
+REF_INF = 1.0    # "above any SL current": disables the second comparator
+
+
+def op_table() -> dict[str, OpSpec]:
+    return {
+        # out = (I > ref1) AND NOT (I > ref2)        -> 1 iff ref1 < I <= ref2
+        "xor":  OpSpec("xor",  REF_LO, REF_HI, False),   # s == 1
+        "and":  OpSpec("and",  REF_HI, REF_INF, False),  # s == 2
+        "or":   OpSpec("or",   REF_LO, REF_INF, False),  # s >= 1
+        # complementary rail of the same datapath (single cycle):
+        "xnor": OpSpec("xnor", REF_LO, REF_HI, True),    # s != 1
+        "nand": OpSpec("nand", REF_HI, REF_INF, True),   # s < 2
+        "nor":  OpSpec("nor",  REF_LO, REF_INF, True),   # s == 0
+    }
+
+
+def sense_datapath(i_sl: jnp.ndarray, spec: OpSpec,
+                   offset1: jnp.ndarray | float = 0.0,
+                   offset2: jnp.ndarray | float = 0.0) -> jnp.ndarray:
+    """The two-CSA + inverter + AND datapath of Fig. 2(c).
+
+    ``offset1/2`` model comparator input-referred offset (from transistor
+    V_t mismatch) as an equivalent reference-current shift — the quantity
+    the Monte-Carlo analysis perturbs.
+    """
+    c1 = i_sl > (spec.ref1 + offset1)
+    c2 = i_sl > (spec.ref2 + offset2)
+    out = jnp.logical_and(c1, jnp.logical_not(c2))
+    return jnp.logical_xor(out, spec.invert_out)
+
+
+def truth_table(spec: OpSpec) -> list[tuple[int, int, int]]:
+    """Evaluate the datapath over the nominal current levels -> (a, b, out)."""
+    levels = {(0, 0): I_00, (0, 1): I_01, (1, 0): I_01, (1, 1): I_11}
+    rows = []
+    for (a, b), i in levels.items():
+        out = bool(sense_datapath(jnp.asarray(i), spec))
+        rows.append((a, b, int(out)))
+    return rows

@@ -1,0 +1,112 @@
+"""Monte-Carlo variation analysis (paper §V, Fig. 5) + array scalability.
+
+Reproduces:
+* the 5000-point MC over Gaussian LRS/HRS (3 sigma = 10% of mean) and
+  transistor V_t (sigma = 25 mV), giving SL-current and CSA node-voltage
+  distributions (Fig. 5(c), 5(d)) and per-input-combination error rates;
+* the max-array-rows vs HRS/LRS scalability analysis (Fig. 5(b)): leakage
+  from unaccessed rows eventually drags I_00 past REF1 — the row budget is
+  where the worst-case '00' current crosses the reference (with margin).
+
+Pure JAX, fully vmapped: one jit evaluates all samples x all input combos.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cim, logic
+
+SIGMA_FRAC = 0.10 / 3.0   # 3 sigma = 10% of mean
+SIGMA_VT = 25e-3          # V
+
+
+class MCResult(NamedTuple):
+    i_sl: jnp.ndarray        # (samples, 3) currents for s = 0, 1, 2
+    v_cell: jnp.ndarray      # (samples, 3) CSA n_CELL voltages
+    v_ref: jnp.ndarray       # (samples, 2) n_REF voltages (REF1, REF2)
+    xor_out: jnp.ndarray     # (samples, 3) bool datapath outputs (XOR)
+    xnor_out: jnp.ndarray    # (samples, 3)
+    error_rate: jnp.ndarray  # (3,) fraction of samples mis-sensed (XOR)
+    margins: jnp.ndarray     # (samples, 2) (I01-REF1eff, REF2eff-I01)
+
+
+def _one_sample(key, rows: int, op_specs) -> tuple:
+    """SL currents + sense outputs for one sampled world.
+
+    Array column under test: two accessed cells with states (0,0)/(0,1)/(1,1)
+    + (rows-2) unaccessed cells in the worst-ish mixed state (half LRS).
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    lrs = cim.LRS * (1.0 + SIGMA_FRAC * jax.random.normal(k1, (rows,)))
+    hrs = cim.HRS * (1.0 + SIGMA_FRAC * jax.random.normal(k2, (rows,)))
+    dvt1 = SIGMA_VT * jax.random.normal(k3, ())
+    dvt2 = SIGMA_VT * jax.random.normal(k4, ())
+    unacc_bits = jax.random.bernoulli(k5, 0.5, (rows - 2,))
+
+    def column_current(bit_a, bit_b):
+        bits = jnp.concatenate([jnp.array([bit_a, bit_b], bool), unacc_bits])
+        r = jnp.where(bits, lrs, hrs)
+        i_on = cim.V_BL / (r + cim.R_ACC)
+        i_leak = jnp.where(bits, cim.LEAK_LRS, cim.LEAK_HRS)
+        wl = jnp.zeros(rows, bool).at[0].set(True).at[1].set(True)
+        return jnp.sum(jnp.where(wl, i_on, i_leak))
+
+    i_s = jnp.stack([column_current(False, False),
+                     column_current(False, True),
+                     column_current(True, True)])          # (3,)
+
+    off1 = cim.vt_offset_to_iref_shift(dvt1, logic.REF_LO)
+    off2 = cim.vt_offset_to_iref_shift(dvt2, logic.REF_HI)
+    xor_spec, xnor_spec = op_specs
+    xor_o = logic.sense_datapath(i_s, xor_spec, off1, off2)
+    xnor_o = logic.sense_datapath(i_s, xnor_spec, off2, off1)
+    v_cell, _ = cim.node_voltages(i_s, i_s)
+    v_ref = jnp.stack([(logic.REF_LO + off1), (logic.REF_HI + off2)]) * cim.R_MIRROR
+    margins = jnp.stack([i_s[1] - (logic.REF_LO + off1),
+                         (logic.REF_HI + off2) - i_s[1]])
+    return i_s, v_cell, v_ref, xor_o, xnor_o, margins
+
+
+def run(key: jax.Array, samples: int = 5000, rows: int = 3) -> MCResult:
+    """The paper's 5000-point MC (vmapped, one jit)."""
+    specs = (logic.op_table()["xor"], logic.op_table()["xnor"])
+    keys = jax.random.split(key, samples)
+    i_s, v_cell, v_ref, xor_o, xnor_o, margins = jax.vmap(
+        lambda k: _one_sample(k, rows, specs))(keys)
+    want_xor = jnp.array([False, True, False])
+    err = jnp.mean(xor_o != want_xor[None, :], axis=0)
+    return MCResult(i_s, v_cell, v_ref, xor_o, xnor_o, err, margins)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5(b): max rows vs on/off ratio
+# ---------------------------------------------------------------------------
+
+def max_rows(lrs: float = cim.LRS, hrs: float = cim.HRS,
+             margin_frac: float = 0.5) -> jnp.ndarray:
+    """Largest row count for which worst-case '00' stays below REF1.
+
+    Worst case: every unaccessed cell is LRS (max leakage).  Scaling the
+    paper's leak constants with 1/R (leak ~ V/R through the off transistor):
+      I_00(N) = 2 * V/(hrs + R_ACC) + (N-2) * LEAK_LRS * (LRS_nom / lrs)
+    Requirement: I_00(N) < margin_frac * REF1 (default: 50% sense margin).
+    Larger HRS/LRS ratio (at fixed HRS) -> smaller lrs -> larger accessed
+    current AND larger leak, matching the paper's trend that the ratio sets
+    scalability.
+    """
+    lrs = jnp.asarray(lrs, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    i_acc_00 = 2 * cim.V_BL / (hrs + cim.R_ACC)
+    leak_lrs = cim.LEAK_LRS * (cim.LRS / lrs)
+    budget = margin_frac * logic.REF_LO - i_acc_00
+    return jnp.floor(budget / leak_lrs) + 2
+
+
+def max_rows_sweep(ratios: jnp.ndarray, vary: str = "lrs") -> jnp.ndarray:
+    """Fig. 5(b): sweep HRS/LRS ratio by varying LRS (black line) or HRS."""
+    if vary == "lrs":
+        return jax.vmap(lambda r: max_rows(lrs=cim.HRS / r, hrs=cim.HRS))(ratios)
+    return jax.vmap(lambda r: max_rows(lrs=cim.LRS, hrs=cim.LRS * r))(ratios)

@@ -1,0 +1,53 @@
+"""Ambient activation-sharding rules (MaxText-style logical axis names).
+
+GSPMD gets argument shardings from in_shardings, but *intermediate*
+placement is cost-model guesswork — and at 256-way meshes it reliably
+guesses wrong for FSDP-sharded contractions (it all-reduces TB-scale
+activations instead of all-gathering MB-scale weight shards; measured in
+EXPERIMENTS.md §Perf iteration 1).  Models therefore pin activations at
+block boundaries via :func:`constrain`, using logical names resolved
+against an ambient rule set.
+
+Outside a mesh/rules context (CPU smoke tests, examples) ``constrain`` is a
+no-op, so model code carries no mesh plumbing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _rules() -> dict | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict | None):
+    """rules: logical axis -> mesh axis (or tuple), e.g.
+    {"batch": ("pod", "data"), "tp": "model", "ep": "model"}."""
+    prev = _rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def constrain(x, *axes):
+    """Pin activation sharding: constrain(y, "batch", None, "tp").
+
+    Logical axes map through the ambient rules; unknown names and absent
+    rules degrade to unconstrained.  Must be called under a mesh context
+    (jit with in_shardings provides one via the dry-run's `with mesh:`).
+    """
+    rules = _rules()
+    if rules is None:
+        return x
+    spec = P(*(rules.get(a) if isinstance(a, str) else None for a in axes))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,104 @@
+"""Fault-tolerance orchestration: checkpoint-restart, straggler mitigation,
+elastic re-meshing policy.
+
+The mechanisms (what this module coordinates):
+* restart      — deterministic resume: step index addresses both the
+                 checkpoint and the (stateless) data pipeline, so a restart
+                 replays nothing and skips nothing.
+* verification — every save/restore parity-checks shards (checkpoint/ckpt.py);
+                 a corrupt shard is treated as a failed node: fall back to
+                 the previous checkpoint.
+* stragglers   — per-step wall-time watermarking: steps slower than
+                 ``straggler_factor`` x the trailing median are logged and
+                 counted; after ``max_strikes`` the runner requests a
+                 re-shard (in a real cluster: evict + re-slice the mesh; in
+                 this container: recorded decision, exercised by tests).
+* elasticity   — checkpoints are tree-path addressed (not device-indexed),
+                 so restore onto a different mesh shape re-shards via the
+                 in_shardings of the target jit — no format migration.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from statistics import median
+
+from repro.checkpoint import ckpt
+
+
+@dataclass
+class StragglerPolicy:
+    straggler_factor: float = 2.0
+    max_strikes: int = 3
+    window: int = 20
+    _times: list = field(default_factory=list)
+    strikes: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> str:
+        """Returns "ok" | "straggler" | "reshard"."""
+        self._times = (self._times + [dt])[-self.window:]
+        if len(self._times) < 5:
+            return "ok"
+        med = median(self._times[:-1])
+        if dt > self.straggler_factor * med:
+            self.strikes += 1
+            self.events.append((step, dt, med))
+            if self.strikes >= self.max_strikes:
+                self.strikes = 0
+                return "reshard"
+            return "straggler"
+        return "ok"
+
+
+@dataclass
+class Runner:
+    """Restartable step loop around a (state, batch)->state step function."""
+    directory: str
+    save_every: int = 50
+    keep_last: int = 3
+    root_key: str | None = None
+    policy: StragglerPolicy = field(default_factory=StragglerPolicy)
+
+    def resume_or_init(self, like, init_fn):
+        """Restore latest valid checkpoint or build fresh state."""
+        step = ckpt.latest_step(self.directory)
+        while step is not None:
+            try:
+                state, _ = ckpt.restore(self.directory, step, like,
+                                        root_key=self.root_key)
+                return state, step
+            except Exception:
+                # corrupt/unreadable shard (parity mismatch, truncated zip,
+                # missing manifest) == failed node: fall back one checkpoint
+                prev = [s for s in self._steps() if s < step]
+                step = max(prev) if prev else None
+        return init_fn(), 0
+
+    def maybe_save(self, step: int, state) -> bool:
+        if step % self.save_every != 0:
+            return False
+        ckpt.save(self.directory, step, state, root_key=self.root_key)
+        self._gc()
+        return True
+
+    def observe_step(self, step: int, dt: float) -> str:
+        return self.policy.observe(step, dt)
+
+    def _steps(self):
+        import os, re
+        if not os.path.isdir(self.directory):
+            return []
+        return sorted(int(m.group(1)) for f in os.listdir(self.directory)
+                      if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+
+    def _gc(self):
+        import os
+        steps = self._steps()
+        for s in steps[:-self.keep_last]:
+            for pat in (f"ckpt_{s:08d}.npz", f"manifest_{s:08d}.msgpack"):
+                try:
+                    os.remove(os.path.join(self.directory, pat))
+                except FileNotFoundError:
+                    pass

@@ -1,0 +1,52 @@
+"""Logical-axis -> mesh-axis rules and sharding helpers.
+
+Mesh axes (launch/mesh.py):
+  pod    — inter-pod (DCN-class links); pure data parallelism, and the axis
+           the 1-bit gradient compression targets.
+  data   — intra-pod batch + FSDP (ZeRO-3 param/optimizer sharding).
+  model  — tensor parallel (heads / d_ff / vocab) and expert parallel.
+
+Rules are per-call overridable — the §Perf hillclimbs swap them without
+touching model code.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DEFAULT_RULES = {"fsdp": "data", "tp": "model", "ep": "model"}
+
+
+def batch_axes(mesh: Mesh, global_batch: int):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    div = 1
+    for a in axes:
+        n = mesh.shape[a]
+        if global_batch % (div * n) == 0:
+            chosen.append(a)
+            div *= n
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_specs(mesh: Mesh, global_batch: int, has_ctx: bool = False):
+    """PartitionSpecs for a train/prefill batch dict."""
+    ba = batch_axes(mesh, global_batch)
+    specs = {"tokens": P(ba, None), "labels": P(ba, None)}
+    if has_ctx:
+        specs["ctx"] = P(ba, None, None)
+    return specs

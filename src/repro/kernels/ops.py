@@ -1,0 +1,164 @@
+"""Public ops: padding, backend dispatch (Pallas on TPU / jnp ref elsewhere).
+
+Every op has three execution paths with identical semantics:
+  * ``impl="pallas"``     — the TPU kernel (real hardware),
+  * ``impl="interpret"``  — the same kernel body interpreted on CPU (tests),
+  * ``impl="ref"``        — the pure-jnp oracle (CPU production + dry-run).
+``impl="auto"`` picks pallas on TPU backends and ref otherwise, so the same
+model code lowers everywhere (the 512-device CPU dry-run included).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.kernels import cipher as _cipher
+from repro.kernels import pack as _pack
+from repro.kernels import parity as _parity
+from repro.kernels import ref
+from repro.kernels import xnor_gemm as _xnor_gemm
+
+_FORCE = os.environ.get("REPRO_KERNEL_IMPL", "")  # "", "ref", "pallas", "interpret"
+
+
+def _resolve(impl: str) -> str:
+    impl = _FORCE or impl
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
+
+
+def _pad_cols(x: jnp.ndarray, mult: int, value=0) -> jnp.ndarray:
+    pad = (-x.shape[-1]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+
+def xnor_matmul(pa: jnp.ndarray, pb: jnp.ndarray, valid_k: int,
+                impl: str = "auto", **blocks) -> jnp.ndarray:
+    """±1 dot in the packed domain for arbitrary (M, Kw) x (N, Kw).
+
+    Padding rule: row pads produce garbage rows that are sliced off; column
+    (word) pads are zero words in BOTH operands, XOR to zero, and are removed
+    by ``valid_k`` accounting (popcount of zero is zero -> each pad word
+    contributes +32 to the padded dot; using valid_k subtracts exactly that).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.xnor_gemm(pa, pb, valid_k)
+    bm = blocks.get("bm", 128)
+    bn = blocks.get("bn", 128)
+    bk = blocks.get("bk", 64)
+    m, n = pa.shape[0], pb.shape[0]
+    pa2, pb2 = _pad_rows(pa, bm), _pad_rows(pb, bn)
+    kw = pa2.shape[1]
+    bk = min(bk, kw) if kw % min(bk, kw) == 0 else 1
+    pa2, pb2 = _pad_cols(pa2, bk), _pad_cols(pb2, bk)
+    # pad words are 0 in both operands => popcount contribution 0; the
+    # (kw_pad*32 - valid_k) correction below removes their +1 dot bias.
+    kpad = pa2.shape[1] * bitpack.WORD
+    out = _xnor_gemm.xnor_gemm(pa2, pb2, valid_k=kpad, bm=bm, bn=bn, bk=bk,
+                               interpret=(impl == "interpret"))
+    return out[:m, :n] - jnp.int32(kpad - valid_k)
+
+
+def binarize(x: jnp.ndarray, impl: str = "auto", bm: int = 256):
+    """(..., K) float -> ((..., Kw) uint32, (...,) f32 alpha). Fused on TPU."""
+    impl = _resolve(impl)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = _pad_cols(x.reshape(-1, k), bitpack.WORD)
+    if impl == "ref":
+        planes = bitpack.pack_bits(x2)
+        alpha = jnp.mean(jnp.abs(x2[:, :k]), axis=-1).astype(jnp.float32)
+    else:
+        m = x2.shape[0]
+        bm = min(bm, m) if m % min(bm, m) == 0 else 1
+        x3 = _pad_rows(x2, bm)
+        planes, alpha = _pack.pack(x3, bm=bm, interpret=(impl == "interpret"))
+        planes, alpha = planes[:m], alpha[:m]
+        # kernel alpha averaged over padded K; rescale to true K.
+        alpha = alpha * (x2.shape[1] / k)
+    return planes.reshape(*lead, -1), alpha.reshape(lead)
+
+
+def digest(buf: jnp.ndarray, digest_width: int = 128, impl: str = "auto",
+           br: int = 512) -> jnp.ndarray:
+    """XOR-parity digest of any array (viewed as a uint32 stream)."""
+    impl = _resolve(impl)
+    words = _as_words(buf)
+    pad = (-words.shape[0]) % digest_width
+    words = jnp.pad(words, (0, pad))  # zeros are XOR-neutral
+    words = words.reshape(-1, digest_width)
+    if impl == "ref":
+        return ref.parity_digest(words, digest_width)
+    r = words.shape[0]
+    br = min(br, r) if r % min(br, r) == 0 else 1
+    words = _pad_rows(words, br)
+    return _parity.parity_digest(words, digest_width=digest_width, br=br,
+                                 interpret=(impl == "interpret"))
+
+
+def stream_cipher(buf: jnp.ndarray, key: jnp.ndarray, counter: int = 0,
+                  impl: str = "auto", br: int = 512) -> jnp.ndarray:
+    """XOR counter-mode cipher over a uint32 buffer. Involution.
+
+    Restricted to uint32 so decryption round-trips bit-exactly; the
+    checkpoint layer views other dtypes as uint32 host-side (numpy .view).
+    """
+    if buf.dtype != jnp.uint32:
+        raise TypeError(f"stream_cipher needs uint32, got {buf.dtype}")
+    impl = _resolve(impl)
+    words = buf.reshape(-1)
+    n = words.shape[0]
+    if impl == "ref":
+        return ref.xor_cipher(words, key, counter).reshape(buf.shape)
+    d = 128
+    pad = (-n) % d
+    w2 = jnp.pad(words, (0, pad)).reshape(-1, d)
+    r = w2.shape[0]
+    br = min(br, r) if r % min(br, r) == 0 else 1
+    w2 = _pad_rows(w2, br)
+    k3 = jnp.array([key[0], key[1], jnp.uint32(counter)], dtype=jnp.uint32)
+    out = _cipher.xor_cipher(w2, k3, br=br, interpret=(impl == "interpret"))
+    return out.reshape(-1)[:n].reshape(buf.shape)
+
+
+def _as_words(buf: jnp.ndarray) -> jnp.ndarray:
+    """Losslessly view any array as a flat uint32 stream (pads odd tails)."""
+    flat = buf.reshape(-1)
+    size = jnp.dtype(flat.dtype).itemsize
+    if flat.dtype == jnp.uint32:
+        return flat
+    if size == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if size == 8:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
+    if size == 2:
+        u16 = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        if u16.shape[0] % 2:
+            u16 = jnp.pad(u16, (0, 1))
+        u16 = u16.reshape(-1, 2).astype(jnp.uint32)
+        return u16[:, 0] | (u16[:, 1] << 16)
+    if size == 1:
+        u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+        pad = (-u8.shape[0]) % 4
+        if pad:
+            u8 = jnp.pad(u8, (0, pad))
+        u8 = u8.reshape(-1, 4).astype(jnp.uint32)
+        return u8[:, 0] | (u8[:, 1] << 8) | (u8[:, 2] << 16) | (u8[:, 3] << 24)
+    raise ValueError(f"unsupported dtype {buf.dtype}")

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused sign-extract + bit-pack + alpha scale.
+
+One HBM pass over the real-valued operand produces (a) the packed sign
+bit-planes and (b) the XNOR-Net scaling factor alpha = mean|x| per row —
+mirroring the paper's sense amplifier producing the digital bit in the same
+cycle that reads the cell.  Without fusion this costs three passes
+(sign, pack, abs-mean); fused it is exactly one read of x.
+
+The 32->1 pack is expressed as a (bm, Kw, 32) reshape + weighted sum over the
+last axis.  Bits are disjoint powers of two, so an integer sum equals the
+bitwise OR; Mosaic lowers the small trailing reduction to lane shuffles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import WORD
+
+
+def _kernel(x_ref, p_ref, a_ref, *, block_k: int):
+    x = x_ref[...].astype(jnp.float32)           # (bm, K)
+    bm, k = x.shape
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, k // WORD, WORD)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD), 2)
+    p_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    a_ref[...] = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def pack(x: jnp.ndarray, *, bm: int = 256, interpret: bool = False):
+    """(M, K) float -> ((M, K/32) uint32 planes, (M,) f32 alpha).
+
+    M % bm == 0 and K % 32 == 0 (ops.binarize pads arbitrary shapes).
+    K is kept unblocked: a full row must be visible to compute alpha in the
+    same pass; rows are streamed bm at a time.
+    """
+    m, k = x.shape
+    assert m % bm == 0 and k % WORD == 0, (x.shape, bm)
+    grid = (m // bm,)
+    planes, alpha = pl.pallas_call(
+        functools.partial(_kernel, block_k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k // WORD), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k // WORD), jnp.uint32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return planes, alpha[:, 0]

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in :mod:`repro.kernels`.
+
+Each function is the semantic ground truth the kernels are tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose /
+bit-exact equality).  They are also the *production fallback* on non-TPU
+backends: ``ops.py`` dispatches here whenever the Pallas path is unavailable,
+so the whole framework (including the 512-device dry-run on CPU) runs the
+same semantics everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+
+GOLDEN = np.uint32(0x9E3779B9)  # numpy scalar: folds into Pallas kernels
+
+
+# ---------------------------------------------------------------------------
+# XNOR-popcount GEMM
+# ---------------------------------------------------------------------------
+
+def xnor_gemm(pa: jnp.ndarray, pb: jnp.ndarray, valid_k: int) -> jnp.ndarray:
+    """Binary (±1) matmul in the packed domain.
+
+    ``pa``: (M, Kw) uint32 bit-planes, ``pb``: (N, Kw) uint32 bit-planes.
+    Returns (M, N) int32 with ``out[m, n] = sum_k a[m, k] * b[n, k]`` over the
+    first ``valid_k`` (unpacked, ±1) positions.  Padding bits must be equal in
+    both operands (``bitpack.pad_to_word`` pads with +1): each padded slot
+    XORs to 0, so ``dot_padded = K_pad - 2*popcount`` and the wrapper removes
+    the pad contribution by using ``valid_k`` instead of ``K_pad``.
+    """
+    x = jnp.bitwise_xor(pa[:, None, :], pb[None, :, :])
+    popc = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.int32(valid_k) - 2 * popc
+
+
+def xnor_dot_float(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Float-domain equivalence oracle: sign(a) @ sign(b).T."""
+    sa = jnp.where(a >= 0, 1.0, -1.0)
+    sb = jnp.where(b >= 0, 1.0, -1.0)
+    return (sa @ sb.T).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused sign-extract + pack + alpha
+# ---------------------------------------------------------------------------
+
+def pack(x: jnp.ndarray):
+    """(M, K) -> ((M, K/32) uint32, (M,) f32 alpha = mean|x|)."""
+    return bitpack.pack_bits(x), jnp.mean(jnp.abs(x), axis=-1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# XOR parity digest (bulk copy-verification)
+# ---------------------------------------------------------------------------
+
+def parity_digest(words: jnp.ndarray, digest_width: int = 128) -> jnp.ndarray:
+    """XOR-fold a flat uint32 buffer into a ``digest_width``-word digest.
+
+    The digest of a buffer is invariant to where the buffer lives — comparing
+    digests of source and copy is the paper's row-parity copy-verification.
+    Buffer length must be a multiple of ``digest_width`` (ops.py pads with 0,
+    which is XOR-neutral).
+    """
+    r = words.reshape(-1, digest_width)
+    return jnp.bitwise_xor.reduce(r, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Counter-mode XOR stream cipher
+# ---------------------------------------------------------------------------
+
+def keystream_word(idx: jnp.ndarray, key0: jnp.ndarray, key1: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic 32-bit keystream: murmur3-finalizer counter hash.
+
+    Not cryptographic — stands in for the paper's "true random key" XOR pad;
+    the framework interface accepts externally supplied pads for real use.
+    Shared verbatim by the Pallas kernel so ref and kernel are bit-identical.
+    """
+    h = idx.astype(jnp.uint32) * GOLDEN + key0.astype(jnp.uint32)
+    h = h ^ key1.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def xor_cipher(words: jnp.ndarray, key: jnp.ndarray, counter: int | jnp.ndarray = 0) -> jnp.ndarray:
+    """Encrypt/decrypt (involution) a flat uint32 buffer in counter mode."""
+    idx = jnp.arange(words.shape[0], dtype=jnp.uint32) + jnp.uint32(counter)
+    return words ^ keystream_word(idx, key[0], key[1])

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bit-packed XNOR-popcount GEMM.
+
+This is the TPU realization of the paper's single-cycle in-memory XNOR: each
+operand word is read from HBM into VMEM exactly once, and the XOR + popcount
++ accumulate all happen in that same pass (VPU int32 lanes; the MXU is
+deliberately idle — binary dot products are bitwise ops, not MACs).
+
+Tiling
+------
+Grid is (M/bm, N/bn, Kw/bk) with the k-axis innermost ("arbitrary"
+dimension semantics: the output block is revisited across k steps and
+accumulated in place, the standard Pallas matmul pattern).  Per grid step the
+VMEM working set is
+
+    a_blk (bm, bk) u32  +  b_blk (bn, bk) u32  +  o_blk (bm, bn) i32
+
+e.g. (128, 128, 128) -> 64 KiB + 64 KiB + 64 KiB, far under the ~16 MiB VMEM
+budget; bk can grow to amortize grid overhead.  The inner loop walks the bk
+packed words one vreg-row at a time so the (bm, bn) partial product is the
+only live intermediate (no (bm, bn, bk) tensor is ever materialized).
+
+Lane alignment: bm, bn multiples of 8 (sublanes) and ideally 128 (lanes);
+bk is a VMEM-bandwidth knob.  `ops.xnor_matmul` pads arbitrary shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, *, bk: int):
+    """One (bm, bn) output block, accumulating over the k-grid axis."""
+    kstep = pl.program_id(2)
+
+    a = a_ref[...]  # (bm, bk) uint32
+    b = b_ref[...]  # (bn, bk) uint32
+
+    def body(w, acc):
+        # One packed word per iteration: 32 bit-ops per int32 lane op.
+        aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)      # (bm, 1)
+        bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)      # (bn, 1)
+        x = jnp.bitwise_xor(aw, bw.reshape(1, -1))              # (bm, bn)
+        return acc + jax.lax.population_count(x).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(
+        0, bk, body, jnp.zeros(o_ref.shape, jnp.int32))
+
+    @pl.when(kstep == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(kstep != 0)
+    def _accum():
+        o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("valid_k", "bm", "bn", "bk", "interpret"))
+def xnor_gemm(pa: jnp.ndarray, pb: jnp.ndarray, *, valid_k: int,
+              bm: int = 128, bn: int = 128, bk: int = 64,
+              interpret: bool = False) -> jnp.ndarray:
+    """Packed binary matmul: (M, Kw) x (N, Kw) -> (M, N) int32 ±1-dot.
+
+    Requires M % bm == N % bn == Kw % bk == 0 (use ops.xnor_matmul for
+    arbitrary shapes).  ``valid_k`` is the unpacked dot length; padding bits
+    must agree between operands (see ref.xnor_gemm).
+    """
+    m, kw = pa.shape
+    n, kw2 = pb.shape
+    assert kw == kw2, (kw, kw2)
+    assert m % bm == 0 and n % bn == 0 and kw % bk == 0, (pa.shape, pb.shape, bm, bn, bk)
+
+    grid = (m // bm, n // bn, kw // bk)
+    popc = pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pa, pb)
+    return jnp.int32(valid_k) - 2 * popc

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+
+Topology model (TPU v5e-class):
+  single pod:  (16, 16)    axes (data, model)   = 256 chips
+  multi pod:   (2, 16, 16) axes (pod, data, model) = 512 chips
+"model" is the innermost axis (fastest ICI neighborhood); "pod" is the
+slow DCN-class axis that the 1-bit gradient compression targets.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(n_devices: int | None = None):
+    """Tiny mesh for CPU-scale distributed tests (e.g. 8 = 2x2x2)."""
+    n = n_devices or len(jax.devices())
+    if n >= 8:
+        shape, axes = (2, 2, n // 4), ("pod", "data", "model")
+    elif n >= 4:
+        shape, axes = (2, n // 2), ("data", "model")
+    else:
+        shape, axes = (1, n), ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

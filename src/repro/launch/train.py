@@ -1,0 +1,113 @@
+"""Training entry point.
+
+Two modes:
+  * default — actually run the training loop at whatever scale the current
+    backend supports (CPU container: use --smoke for a reduced config).
+  * --dry   — lower+compile only, on the production mesh (see dryrun.py for
+    the batch version over all cells).
+
+Fault tolerance is on by default: checkpoints every --save-every steps with
+XOR-parity verification (+ optional --encrypt-key), resume-from-latest on
+start, straggler watermarking via distributed.fault.Runner.
+
+Example (container scale):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+      --steps 60 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.data.synthetic import Pipeline
+from repro.distributed import fault
+from repro.models import lm
+from repro.train import train_step as train_mod
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--quant", default=None, choices=[None, "xnor"],
+                    help="binary (XNOR-Net) projections — the paper's mode")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--encrypt-key", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if args.quant:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, quant=args.quant)
+    print(f"arch={cfg.name} params={lm.param_count(cfg)/1e6:.2f}M "
+          f"active={lm.active_param_count(cfg)/1e6:.2f}M quant={cfg.quant}")
+
+    pipe = Pipeline(cfg, args.batch, args.seq, seed=args.seed)
+
+    runner = None
+    start_step = 0
+    state = None
+    if args.ckpt_dir:
+        runner = fault.Runner(args.ckpt_dir, save_every=args.save_every,
+                              root_key=args.encrypt_key)
+        like = train_mod.abstract_state(cfg)
+        state, start_step = runner.resume_or_init(
+            like, lambda: train_mod.init_state(cfg, jax.random.PRNGKey(args.seed)))
+        if start_step:
+            print(f"resumed from checkpoint @ step {start_step}")
+    if state is None or start_step == 0:
+        state = train_mod.init_state(cfg, jax.random.PRNGKey(args.seed))
+
+    @jax.jit
+    def step_fn(state, batch, step):
+        return train_mod.train_step(cfg, state, batch, step,
+                                    peak_lr=args.lr, warmup=args.warmup,
+                                    total=args.steps,
+                                    microbatch=args.microbatch)
+
+    losses = []
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        host_batch = pipe.get(step)
+        batch = jax.tree.map(jnp.asarray, host_batch)
+        state, metrics = step_fn(state, batch, jnp.asarray(step, jnp.int32))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        if runner:
+            verdict = runner.observe_step(step, dt)
+            if verdict != "ok":
+                print(f"[fault] step {step}: {verdict}")
+            runner.maybe_save(step + 1, state)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['gnorm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+
+    first = np.mean(losses[:5]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"loss: first~{first:.4f} last~{last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

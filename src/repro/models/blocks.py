@@ -1,0 +1,626 @@
+"""Decoder blocks (one per kind) + the scanned-segment machinery.
+
+A model's depth plan is a list of (kind, count) segments
+(``ArchConfig.segments()``).  Within a segment all layers share a kind, so
+their parameters are stacked on a leading axis and the segment is applied
+with ``jax.lax.scan`` — keeping the HLO size O(#segments), not O(#layers),
+which is what makes 512-device lower+compile tractable for 48-layer models.
+
+Block kinds:
+  attn   — GQA self-attention + SwiGLU FFN (dense transformers)
+  local  — sliding-window GQA + FFN (RecurrentGemma attention layers)
+  moe    — GQA self-attention + top-k MoE FFN
+  cross  — cross-attention to modality context + FFN (Llama-3.2-Vision)
+  enc    — bidirectional self-attention + FFN (Whisper encoder)
+  dec    — self-attn + cross-attn + FFN (Whisper decoder)
+  rglru  — Griffin recurrent block (conv1d + RG-LRU) + FFN
+  mlstm  — xLSTM mLSTM block (own up/down projections, no FFN)
+  slstm  — xLSTM sLSTM block (post-up GLU projection)
+
+Every kind implements:
+  defs(cfg, n)                          stacked ParamDefs
+  fwd(cfg, p, x, ctx, opts)             -> (x, aux, state|None)
+  decode(cfg, p, x, state, pos, ctx)    -> (x, state)
+  state_spec(cfg, batch, s_max, abstract) decode-state pytree per layer
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from repro.models import attention as attn_mod
+from repro.models import layers, moe, ssm
+from repro.models.attention import KVCache
+from repro.models.params import ParamDef
+
+
+class FwdOpts(NamedTuple):
+    q_chunk: int = 0          # stream queries in chunks of this size
+    want_state: bool = False  # prefill: return decode state
+    s_max: int = 0            # cache capacity when want_state
+    unroll: bool = False      # unroll inner chunk loops (exact HLO costs)
+
+
+def _norm_def(cfg, n):
+    return ParamDef((n, cfg.d_model), (None, None), jnp.float32, init="ones")
+
+
+# ---------------------------------------------------------------------------
+# attention-family blocks
+# ---------------------------------------------------------------------------
+
+def _attn_ffn_defs(cfg, n, window=False, moe_ffn_=False, cross=False,
+                   encdec=False):
+    defs = {"ln1": _norm_def(cfg, n), "ln2": _norm_def(cfg, n)}
+    defs |= {f"attn_{k}": v for k, v in attn_mod.attn_defs(cfg, n, cross=cross).items()}
+    if encdec:
+        defs["lnx"] = _norm_def(cfg, n)
+        defs |= {f"xattn_{k}": v
+                 for k, v in attn_mod.attn_defs(cfg, n, cross=True).items()}
+    if moe_ffn_:
+        defs |= {f"moe_{k}": v for k, v in moe.moe_defs(cfg, n).items()}
+    else:
+        defs |= {f"ffn_{k}": v for k, v in layers.ffn_defs(cfg, n).items()}
+    return defs
+
+
+def _sub(p: dict, prefix: str) -> dict:
+    cut = len(prefix)
+    return {k[cut:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def _kv_from_seq(cfg, k, v, s_max, rolling: bool = False):
+    """(B, S, KV, dh) k/v -> KVCache of capacity s_max.
+
+    ``rolling=True`` (local windows): keep the trailing s_max tokens laid out
+    so that slot == position % s_max, matching decode_attention's rolling
+    write (token at position p lands in slot p % s_max).
+    """
+    s = k.shape[1]
+    if rolling and s > s_max:
+        k, v = k[:, -s_max:], v[:, -s_max:]
+        shift = s % s_max
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+    ck = jnp.moveaxis(k, 1, 2)
+    cv = jnp.moveaxis(v, 1, 2)
+    pad = s_max - ck.shape[2]
+    if pad > 0:
+        ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if cfg.kv_cache_dtype == "i8":
+        from repro.models.attention import KV_I8_SCALE
+        enc = lambda x: jnp.clip(jnp.round(x.astype(jnp.float32)
+                                           * KV_I8_SCALE), -127, 127
+                                 ).astype(jnp.int8)
+        return KVCache(enc(ck), enc(cv))
+    return KVCache(ck.astype(cfg.dtype), cv.astype(cfg.dtype))
+
+
+class AttnBlock:
+    kind = "attn"
+    causal = True
+    window = 0
+
+    @classmethod
+    def defs(cls, cfg, n):
+        return _attn_ffn_defs(cfg, n)
+
+    @classmethod
+    def _ffn(cls, cfg, p, x):
+        h = layers.rms_norm(x, p["ln2"])
+        return x + layers.ffn(cfg, _sub(p, "ffn_"), h), jnp.float32(0.0)
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        h = layers.rms_norm(x, p["ln1"])
+        ap = _sub(p, "attn_")
+        win = cfg.local_window if cls.window else 0
+        state = None
+        if opts.want_state:
+            s = h.shape[1]
+            positions = jnp.arange(s)
+            k, v = attn_mod._project_kv(cfg, ap, h, positions)
+            cap = min(opts.s_max, win) if win else opts.s_max
+            state = _kv_from_seq(cfg, k, v, cap, rolling=bool(win))
+        y = attn_mod.attention(cfg, ap, h, causal=cls.causal, window=win,
+                               q_chunk=opts.q_chunk, unroll=opts.unroll)
+        x = x + y
+        x, aux = cls._ffn(cfg, p, x)
+        return x, aux, state
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        h = layers.rms_norm(x, p["ln1"])
+        win = cfg.local_window if cls.window else 0
+        y, state = attn_mod.decode_attention(cfg, _sub(p, "attn_"), h, state,
+                                             pos, window=win)
+        x = x + y
+        x, _ = cls._ffn(cfg, p, x)
+        return x, state
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        cap = min(s_max, cfg.local_window) if cls.window else s_max
+        mk = KVCache.abstract if abstract else KVCache.zeros
+        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
+        return mk(cfg, batch, cap, dtype=dt)
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        """ba = batch mesh axes; kv_shard: "heads" (TP over KV heads) or
+        "seq" (sequence-parallel cache — the softmax reduces over shards,
+        XLA inserts the partial-max/sum all-reduces)."""
+        if kv_shard == "seq":
+            spec = P(ba, None, "model", None)
+        else:
+            spec = P(ba, "model", None, None)
+        return KVCache(spec, spec)
+
+
+class LocalBlock(AttnBlock):
+    kind = "local"
+    window = 1
+
+
+class EncBlock(AttnBlock):
+    kind = "enc"
+    causal = False
+
+
+class MoeBlock(AttnBlock):
+    kind = "moe"
+
+    @classmethod
+    def defs(cls, cfg, n):
+        return _attn_ffn_defs(cfg, n, moe_ffn_=True)
+
+    @classmethod
+    def _ffn(cls, cfg, p, x):
+        h = layers.rms_norm(x, p["ln2"])
+        y, aux = moe.moe_ffn(cfg, _sub(p, "moe_"), h)
+        return x + y, aux
+
+
+class CrossBlock:
+    kind = "cross"
+
+    @classmethod
+    def defs(cls, cfg, n):
+        return _attn_ffn_defs(cfg, n, cross=True)
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        ap = _sub(p, "attn_")
+        ctx_kv = attn_mod.make_ctx_kv(cfg, ap, ctx)
+        h = layers.rms_norm(x, p["ln1"])
+        x = x + attn_mod.cross_attention(cfg, ap, h, ctx_kv)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        state = ctx_kv if opts.want_state else None
+        return x, jnp.float32(0.0), state
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        h = layers.rms_norm(x, p["ln1"])
+        x = x + attn_mod.decode_cross_attention(cfg, _sub(p, "attn_"), h, state)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        return x, state
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        shp = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.d_head)
+        if abstract:
+            return (jax.ShapeDtypeStruct(shp, cfg.dtype),) * 2
+        return (jnp.zeros(shp, cfg.dtype), jnp.zeros(shp, cfg.dtype))
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        # ctx_kv (B, T_ctx, KV, dh): shard the ctx-token axis when divisible
+        # (KV heads rarely divide 16-way TP), else replicate (small).
+        if cfg.n_ctx_tokens % tp_size == 0:
+            return (P(ba, "model", None, None),) * 2
+        return (P(ba, None, None, None),) * 2
+
+
+class DecBlock:
+    """Whisper decoder block: self-attn + cross-attn(encoder) + FFN."""
+    kind = "dec"
+
+    @classmethod
+    def defs(cls, cfg, n):
+        return _attn_ffn_defs(cfg, n, encdec=True)
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        h = layers.rms_norm(x, p["ln1"])
+        ap = _sub(p, "attn_")
+        self_state = None
+        if opts.want_state:
+            s = h.shape[1]
+            k, v = attn_mod._project_kv(cfg, ap, h, jnp.arange(s))
+            self_state = _kv_from_seq(cfg, k, v, opts.s_max)
+        x = x + attn_mod.attention(cfg, ap, h, causal=True,
+                                   q_chunk=opts.q_chunk, unroll=opts.unroll)
+        xp = _sub(p, "xattn_")
+        ctx_kv = attn_mod.make_ctx_kv(cfg, xp, ctx)
+        h = layers.rms_norm(x, p["lnx"])
+        x = x + attn_mod.cross_attention(cfg, xp, h, ctx_kv)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        state = (self_state, ctx_kv) if opts.want_state else None
+        return x, jnp.float32(0.0), state
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        self_cache, ctx_kv = state
+        h = layers.rms_norm(x, p["ln1"])
+        y, self_cache = attn_mod.decode_attention(cfg, _sub(p, "attn_"), h,
+                                                  self_cache, pos)
+        x = x + y
+        h = layers.rms_norm(x, p["lnx"])
+        x = x + attn_mod.decode_cross_attention(cfg, _sub(p, "xattn_"), h, ctx_kv)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        return x, (self_cache, ctx_kv)
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        mk = KVCache.abstract if abstract else KVCache.zeros
+        shp = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.d_head)
+        if abstract:
+            ctx_kv = (jax.ShapeDtypeStruct(shp, cfg.dtype),) * 2
+        else:
+            ctx_kv = (jnp.zeros(shp, cfg.dtype), jnp.zeros(shp, cfg.dtype))
+        return (mk(cfg, batch, s_max), ctx_kv)
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        self_spec = AttnBlock.state_pspec(cfg, ba, kv_shard, tp_size)
+        return (self_spec, CrossBlock.state_pspec(cfg, ba, kv_shard, tp_size))
+
+
+# ---------------------------------------------------------------------------
+# recurrent blocks
+# ---------------------------------------------------------------------------
+
+class RglruBlock:
+    kind = "rglru"
+
+    @classmethod
+    def defs(cls, cfg, n):
+        d = cfg.d_model
+        return {
+            "ln1": _norm_def(cfg, n), "ln2": _norm_def(cfg, n),
+            "w_gate": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "w_x": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "conv_k": ParamDef((n, cfg.conv_width, d), (None, None, "tp"),
+                               jnp.float32, scale=0.5),
+            "w_r": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "w_i": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "lam": ParamDef((n, d), (None, "tp"), jnp.float32, init="ones"),
+            "w_out": ParamDef((n, d, d), (None, "tp", "fsdp"), cfg.dtype),
+        } | {f"ffn_{k}": v for k, v in layers.ffn_defs(cfg, n).items()}
+
+    @classmethod
+    def _mix(cls, cfg, p, h):
+        g = jax.nn.gelu(layers.linear(h, p["w_gate"], cfg.quant))
+        u = layers.linear(h, p["w_x"], cfg.quant)
+        return (constrain(g, "batch", None, "tp"),
+                constrain(u, "batch", None, "tp"))
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        h = layers.rms_norm(x, p["ln1"])
+        g, u = cls._mix(cfg, p, h)
+        uc = ssm.conv1d(u, p["conv_k"])
+        r = layers.linear(uc, p["w_r"], cfg.quant)
+        i = layers.linear(uc, p["w_i"], cfg.quant)
+        st0 = ssm.RGLRUState.zeros(x.shape[0], cfg.d_model)
+        y, st = ssm.rglru(uc, r, i, p["lam"], cfg.rglru_c, st0)
+        x = x + layers.linear(g * y, p["w_out"], cfg.quant)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        state = None
+        if opts.want_state:
+            w = cfg.conv_width
+            buf = u[:, -(w - 1):].astype(cfg.dtype)
+            state = (st, buf)
+        return x, jnp.float32(0.0), state
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        st, buf = state
+        h = layers.rms_norm(x, p["ln1"])
+        g, u = cls._mix(cfg, p, h)
+        uc, buf = ssm.conv1d_step(buf, u, p["conv_k"])
+        r = layers.linear(uc, p["w_r"], cfg.quant)
+        i = layers.linear(uc, p["w_i"], cfg.quant)
+        y, st = ssm.rglru_step(uc, r, i, p["lam"], cfg.rglru_c, st)
+        x = x + layers.linear(g * y, p["w_out"], cfg.quant)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        return x, (st, buf.astype(cfg.dtype))
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        w = cfg.conv_width
+        if abstract:
+            return (ssm.RGLRUState.abstract(batch, cfg.d_model),
+                    jax.ShapeDtypeStruct((batch, w - 1, cfg.d_model), cfg.dtype))
+        return (ssm.RGLRUState.zeros(batch, cfg.d_model),
+                jnp.zeros((batch, w - 1, cfg.d_model), cfg.dtype))
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        return (ssm.RGLRUState(P(ba, "model")), P(ba, None, "model"))
+
+
+class MlstmBlock:
+    kind = "mlstm"
+
+    @classmethod
+    def _di(cls, cfg):
+        return int(cfg.proj_factor * cfg.d_model)
+
+    @classmethod
+    def defs(cls, cfg, n):
+        d, di, nh = cfg.d_model, cls._di(cfg), cfg.n_heads
+        return {
+            "ln1": _norm_def(cfg, n),
+            "w_up": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype),
+            "w_gate": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype),
+            "conv_k": ParamDef((n, cfg.conv_width, di), (None, None, "tp"),
+                               jnp.float32, scale=0.5),
+            "wq": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
+            "wk": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
+            "wv": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
+            "w_if": ParamDef((n, di, 2 * nh), (None, "fsdp", None), jnp.float32),
+            "b_if": ParamDef((n, 2 * nh), (None, None), jnp.float32, init="zeros"),
+            "out_norm": ParamDef((n, di), (None, "tp"), jnp.float32, init="ones"),
+            "w_down": ParamDef((n, di, d), (None, "tp", "fsdp"), cfg.dtype),
+        }
+
+    @classmethod
+    def _qkvif(cls, cfg, p, u, uc):
+        nh = cfg.n_heads
+        di = cls._di(cfg)
+        dh = di // nh
+        b, s = u.shape[:2]
+        q = layers.linear(uc, p["wq"], cfg.quant).reshape(b, s, nh, dh)
+        k = layers.linear(uc, p["wk"], cfg.quant).reshape(b, s, nh, dh) * (dh ** -0.5)
+        v = layers.linear(u, p["wv"], cfg.quant).reshape(b, s, nh, dh)
+        gif = jnp.einsum("bsd,dg->bsg", uc.astype(jnp.float32),
+                         p["w_if"]) + p["b_if"]
+        return q, k, v, gif[..., :nh], gif[..., nh:]
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        b, s, d = x.shape
+        di, nh = cls._di(cfg), cfg.n_heads
+        h = layers.rms_norm(x, p["ln1"])
+        u = constrain(layers.linear(h, p["w_up"], cfg.quant),
+                      "batch", None, "tp")
+        z = constrain(layers.linear(h, p["w_gate"], cfg.quant),
+                      "batch", None, "tp")
+        uc = jax.nn.silu(ssm.conv1d(u, p["conv_k"]))
+        q, k, v, ig, fg = cls._qkvif(cfg, p, u, uc)
+        st0 = ssm.MLSTMState.zeros(b, nh, di // nh)
+        # chunk loop stays scanned even in unrolled-roofline runs: the
+        # intra-chunk D-matrix is O(L^2) and unrolling ncs x layers bodies
+        # explodes compile; the resulting HLO-flop undercount is documented
+        # analytically in EXPERIMENTS.md SSM note.
+        hseq, st = ssm.mlstm_chunkwise(q, k, v, ig, fg, st0,
+                                       min(cfg.mlstm_chunk, s))
+        hseq = hseq.reshape(b, s, di).astype(x.dtype)
+        hseq = layers.rms_norm(hseq, p["out_norm"]) * jax.nn.silu(z)
+        x = x + layers.linear(hseq, p["w_down"], cfg.quant)
+        state = None
+        if opts.want_state:
+            w = cfg.conv_width
+            state = (st, u[:, -(w - 1):].astype(cfg.dtype))
+        return x, jnp.float32(0.0), state
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        st, buf = state
+        b = x.shape[0]
+        di, nh = cls._di(cfg), cfg.n_heads
+        h = layers.rms_norm(x, p["ln1"])
+        u = layers.linear(h, p["w_up"], cfg.quant)
+        z = layers.linear(h, p["w_gate"], cfg.quant)
+        uc_lin, buf = ssm.conv1d_step(buf, u, p["conv_k"])
+        uc = jax.nn.silu(uc_lin)
+        q, k, v, ig, fg = cls._qkvif(cfg, p, u, uc)
+        hstep, st = ssm.mlstm_step(st, q[:, 0], k[:, 0], v[:, 0],
+                                   ig[:, 0], fg[:, 0])
+        hstep = hstep.reshape(b, 1, di).astype(x.dtype)
+        hstep = layers.rms_norm(hstep, p["out_norm"]) * jax.nn.silu(z)
+        x = x + layers.linear(hstep, p["w_down"], cfg.quant)
+        return x, (st, buf.astype(cfg.dtype))
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        di, nh = cls._di(cfg), cfg.n_heads
+        w = cfg.conv_width
+        if abstract:
+            return (ssm.MLSTMState.abstract(batch, nh, di // nh),
+                    jax.ShapeDtypeStruct((batch, w - 1, di), cfg.dtype))
+        return (ssm.MLSTMState.zeros(batch, nh, di // nh),
+                jnp.zeros((batch, w - 1, di), cfg.dtype))
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        # mLSTM matrix memory: NH (4) won't divide 16-way TP; shard the
+        # first dh axis instead (dh = proj_factor*d/NH = 512, divisible).
+        return (ssm.MLSTMState(P(ba, None, "model", None),
+                               P(ba, None, "model"), P(ba, None)),
+                P(ba, None, "model"))
+
+
+class SlstmBlock:
+    kind = "slstm"
+
+    @classmethod
+    def defs(cls, cfg, n):
+        d, nh = cfg.d_model, cfg.n_heads
+        dh = d // nh
+        dff = int(4 * d / 3 / 64) * 64 * 2  # GLU up width (xLSTM 4/3 factor)
+        return {
+            "ln1": _norm_def(cfg, n),
+            "w_gates": ParamDef((n, d, 4 * d), (None, "fsdp", "tp"), cfg.dtype),
+            # r_kernel is tiny and nh (4) won't divide 16-way TP: replicate
+            "r_kernel": ParamDef((n, 4, nh, dh, dh),
+                                 (None, None, None, None, None),
+                                 jnp.float32, scale=0.05),
+            "ln2": _norm_def(cfg, n),
+            "w_up": ParamDef((n, d, dff), (None, "fsdp", "tp"), cfg.dtype),
+            "w_down": ParamDef((n, dff // 2, d), (None, "tp", "fsdp"), cfg.dtype),
+        }
+
+    @classmethod
+    def _post_ffn(cls, cfg, p, x):
+        h = layers.rms_norm(x, p["ln2"])
+        up = layers.linear(h, p["w_up"], cfg.quant)
+        a, g = jnp.split(up, 2, axis=-1)
+        return x + layers.linear(a * jax.nn.gelu(g), p["w_down"], cfg.quant)
+
+    @classmethod
+    def fwd(cls, cfg, p, x, ctx, opts: FwdOpts):
+        b = x.shape[0]
+        h = layers.rms_norm(x, p["ln1"])
+        gates = constrain(layers.linear(h, p["w_gates"], cfg.quant),
+                          "batch", None, "tp")
+        st0 = ssm.SLSTMState.zeros(b, cfg.d_model)
+        y, st = ssm.slstm_sequence(gates, p["r_kernel"], st0, cfg.n_heads)
+        x = x + y.astype(x.dtype)
+        x = cls._post_ffn(cfg, p, x)
+        return x, jnp.float32(0.0), (st if opts.want_state else None)
+
+    @classmethod
+    def decode(cls, cfg, p, x, state, pos, ctx):
+        h = layers.rms_norm(x, p["ln1"])
+        gates = layers.linear(h, p["w_gates"], cfg.quant)
+        state, y = ssm.slstm_step(state, gates[:, 0], p["r_kernel"], cfg.n_heads)
+        x = x + y[:, None].astype(x.dtype)
+        x = cls._post_ffn(cfg, p, x)
+        return x, state
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        mk = ssm.SLSTMState.abstract if abstract else ssm.SLSTMState.zeros
+        return mk(batch, cfg.d_model)
+
+    @classmethod
+    def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+        return ssm.SLSTMState(*(P(ba, "model"),) * 4)
+
+
+KINDS: dict[str, Any] = {c.kind: c for c in
+                         [AttnBlock, LocalBlock, EncBlock, MoeBlock, CrossBlock,
+                          DecBlock, RglruBlock, MlstmBlock, SlstmBlock]}
+
+
+# ---------------------------------------------------------------------------
+# scanned segments
+# ---------------------------------------------------------------------------
+
+def segment_defs(cfg, segments=None) -> list:
+    return [(kind, n, KINDS[kind].defs(cfg, n))
+            for kind, n in (segments or cfg.segments())]
+
+
+def segment_fwd(cfg, seg_params: list, x, ctx=None,
+                opts: FwdOpts = FwdOpts(), remat: bool = False,
+                unroll: bool = False):
+    """Apply all segments. Returns (x, aux_total, states per segment).
+
+    ``unroll=True`` replaces lax.scan with a Python loop: identical math and
+    memory behavior (per-layer remat preserved), but every layer appears in
+    the HLO — required for exact cost/collective analysis, since XLA's
+    cost_analysis counts a while-loop body once regardless of trip count.
+    """
+    aux_total = jnp.float32(0.0)
+    states = []
+    for (kind, n), p in seg_params:
+        block = KINDS[kind]
+
+        def body(carry, pl, _block=block):
+            xc, aux = carry
+            xn, a, st = _block.fwd(cfg, pl, xc, ctx, opts)
+            return (xn, aux + a), st
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        if unroll:
+            sts = []
+            carry = (x, aux_total)
+            for i in range(n):
+                pl = jax.tree.map(lambda a: a[i], p)
+                carry, st_i = body(carry, pl)
+                sts.append(st_i)
+            (x, aux_total) = carry
+            st = (jax.tree.map(lambda *ls: jnp.stack(ls), *sts)
+                  if sts[0] is not None else None)
+        else:
+            (x, aux_total), st = jax.lax.scan(body, (x, aux_total), p)
+        states.append(st)
+    return x, aux_total, states
+
+
+def segment_decode(cfg, seg_params: list, x, states: list, pos, ctx=None,
+                   unroll: bool = False):
+    new_states = []
+    for ((kind, n), p), st in zip(seg_params, states):
+        block = KINDS[kind]
+
+        def body(xc, pst, _block=block):
+            pl, stl = pst
+            xn, stn = _block.decode(cfg, pl, xc, stl, pos, ctx)
+            return xn, stn
+
+        if unroll:
+            outs = []
+            for i in range(n):
+                pst = jax.tree.map(lambda a: a[i], (p, st))
+                x, stn_i = body(x, pst)
+                outs.append(stn_i)
+            stn = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        else:
+            x, stn = jax.lax.scan(body, x, (p, st))
+        new_states.append(stn)
+    return x, new_states
+
+
+def segment_states(cfg, segments, batch, s_max, abstract: bool):
+    """Stacked decode states per segment (leading axis = layers in segment)."""
+    out = []
+    for kind, n in segments:
+        block = KINDS[kind]
+        one = block.state_spec(cfg, batch, s_max, abstract)
+        if abstract:
+            stacked = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), one)
+        else:
+            stacked = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), one)
+        out.append(stacked)
+    return out
+
+
+def segment_state_pspecs(cfg, segments, ba, kv_shard: str = "heads",
+                         tp_size: int = 16):
+    """PartitionSpecs matching segment_states (stack axis unsharded)."""
+    out = []
+    for kind, n in segments:
+        one = KINDS[kind].state_pspec(cfg, ba, kv_shard, tp_size)
+        out.append(jax.tree.map(lambda s: P(None, *s), one,
+                                is_leaf=lambda x: isinstance(x, P)))
+    return out

@@ -1,0 +1,204 @@
+"""Language-model assembly: embeddings + scanned segments + head, for all
+ten assigned architectures (decoder-only, VLM cross-attn, and enc-dec).
+
+Public surface (all pure functions of (cfg, params, ...)):
+  param_defs / abstract_params / param_pspecs / init_params
+  forward(cfg, params, tokens, ctx)          -> (logits, aux)
+  loss_fn(cfg, params, batch)                -> (loss, metrics)
+  prefill(cfg, params, tokens, ctx, s_max)   -> (last_logits, DecodeState)
+  decode_step(cfg, params, token, state)     -> (logits, DecodeState)
+
+``ctx`` is the stubbed modality context: precomputed patch embeddings (vlm)
+or encoder frames (audio); None for text-only archs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, layers
+from repro.models import params as pdefs
+from repro.models.blocks import FwdOpts
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+# ---------------------------------------------------------------------------
+
+def param_defs(cfg) -> dict:
+    defs: dict[str, Any] = {"embed": layers.embed_defs(cfg)}
+    for i, (kind, n, d) in enumerate(blocks.segment_defs(cfg)):
+        defs[f"seg{i}_{kind}"] = d
+    if cfg.is_encdec():
+        enc_segs = [("enc", cfg.encoder_layers)]
+        for i, (kind, n, d) in enumerate(blocks.segment_defs(cfg, enc_segs)):
+            defs[f"enc{i}_{kind}"] = d
+        defs["enc_norm"] = pdefs.ParamDef((cfg.d_model,), (None,),
+                                          jnp.float32, init="ones")
+    return defs
+
+
+def abstract_params(cfg):
+    return pdefs.abstract(param_defs(cfg))
+
+
+def param_pspecs(cfg, rules: dict):
+    return pdefs.pspecs(param_defs(cfg), rules)
+
+
+def init_params(cfg, key: jax.Array):
+    return pdefs.init(param_defs(cfg), key)
+
+
+def param_count(cfg) -> int:
+    return pdefs.count(param_defs(cfg))
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token: excludes the embedding table gather and
+    non-routed experts (MODEL_FLOPS accounting, DESIGN.md §9)."""
+    total = pdefs.count(param_defs(cfg))
+    inactive = cfg.vocab * cfg.d_model          # embedding table
+    if cfg.n_experts:
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        n_moe = sum(1 for k in cfg.layer_kinds() if k == "moe")
+        inactive += n_moe * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg, kind: str, tokens: int) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference forward."""
+    n = active_param_count(cfg)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def _seg_params(cfg, params, enc: bool = False):
+    """[( (kind, n), stacked-params ), ...] in depth order."""
+    segs = [("enc", cfg.encoder_layers)] if enc else cfg.segments()
+    prefix = "enc" if enc else "seg"
+    out = []
+    for i, (kind, n) in enumerate(segs):
+        out.append(((kind, n), params[f"{prefix}{i}_{kind}"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, frames: jnp.ndarray, q_chunk: int = 0) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B, T, d)."""
+    x, _, _ = blocks.segment_fwd(cfg, _seg_params(cfg, params, enc=True),
+                                 frames.astype(cfg.dtype), None,
+                                 FwdOpts(q_chunk=q_chunk))
+    return layers.rms_norm(x, params["enc_norm"])
+
+
+def forward(cfg, params, tokens: jnp.ndarray, ctx: jnp.ndarray | None = None,
+            q_chunk: int = 0, remat: bool = False, unroll: bool = False):
+    """tokens (B, S) -> (logits (B, S, V), aux)."""
+    x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.is_encdec():
+        assert ctx is not None, "enc-dec arch needs encoder frames"
+        ctx = encode(cfg, params, ctx, q_chunk)
+    elif ctx is not None:
+        ctx = ctx.astype(cfg.dtype)
+    x, aux, _ = blocks.segment_fwd(cfg, _seg_params(cfg, params), x, ctx,
+                                   FwdOpts(q_chunk=q_chunk, unroll=unroll),
+                                   remat=remat, unroll=unroll)
+    return layers.logits(cfg, params["embed"], x), aux
+
+
+def loss_fn(cfg, params, batch: dict, q_chunk: int = 0, remat: bool = True,
+            unroll: bool = False):
+    """Next-token CE (labels pre-shifted by the data pipeline; -1 = pad).
+
+    The picked-logit term is a one-hot contraction, NOT take_along_axis:
+    gathering along the vocab axis defeats the vocab (TP) sharding — GSPMD
+    replicates the full (tokens, vocab) f32 logits on every chip (hundreds
+    of GiB at production shapes).  The iota==label formulation partitions
+    cleanly (local compare/multiply + a reduction over the sharded axis).
+    """
+    logits, aux = forward(cfg, params, batch["tokens"], batch.get("ctx"),
+                          q_chunk=q_chunk, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    onehot = (labels[..., None]
+              == jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1))
+    picked = jnp.sum(logits32 * onehot, axis=-1)
+    ll = picked - lse
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    ce = -jnp.sum(ll * valid) / denom
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "tokens": jnp.sum(valid).astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    pos: jnp.ndarray          # scalar int32: number of tokens consumed
+    seg_states: tuple         # per-segment stacked block states
+    ctx: Any = None           # encoded modality context (or None)
+
+
+def decode_state_spec(cfg, batch: int, s_max: int, abstract: bool = True):
+    """The resident serving state for (arch, batch, cache length)."""
+    seg_states = blocks.segment_states(cfg, cfg.segments(), batch, s_max,
+                                       abstract)
+    ctx = None
+    if cfg.n_ctx_tokens and not cfg.is_encdec():
+        shp = (batch, cfg.n_ctx_tokens, cfg.d_model)
+        ctx = (jax.ShapeDtypeStruct(shp, cfg.dtype) if abstract
+               else jnp.zeros(shp, cfg.dtype))
+    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+           else jnp.zeros((), jnp.int32))
+    return DecodeState(pos, tuple(seg_states), ctx)
+
+
+def decode_state_pspecs(cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
+    """PartitionSpecs mirroring decode_state_spec (ba = batch mesh axes)."""
+    from jax.sharding import PartitionSpec as P
+    seg = blocks.segment_state_pspecs(cfg, cfg.segments(), ba, kv_shard,
+                                      tp_size)
+    ctx = None
+    if cfg.n_ctx_tokens and not cfg.is_encdec():
+        ctx = P(ba, None, None)
+    return DecodeState(P(), tuple(seg), ctx)
+
+
+def prefill(cfg, params, tokens: jnp.ndarray, ctx: jnp.ndarray | None,
+            s_max: int, q_chunk: int = 0, unroll: bool = False):
+    x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.is_encdec():
+        ctx = encode(cfg, params, ctx, q_chunk)
+    elif ctx is not None:
+        ctx = ctx.astype(cfg.dtype)
+    opts = FwdOpts(q_chunk=q_chunk, want_state=True, s_max=s_max,
+                   unroll=unroll)
+    x, _, states = blocks.segment_fwd(cfg, _seg_params(cfg, params), x, ctx,
+                                      opts, unroll=unroll)
+    logits = layers.logits(cfg, params["embed"], x[:, -1:])
+    pos = jnp.asarray(tokens.shape[1], jnp.int32)
+    keep_ctx = ctx if (cfg.is_encdec() or cfg.n_ctx_tokens) else None
+    return logits, DecodeState(pos, tuple(states), keep_ctx)
+
+
+def decode_step(cfg, params, token: jnp.ndarray, state: DecodeState,
+                unroll: bool = False):
+    """token (B, 1) int32 -> (logits (B, 1, V), new state)."""
+    x = layers.embed(params["embed"], token).astype(cfg.dtype)
+    x, new_states = blocks.segment_decode(cfg, _seg_params(cfg, params), x,
+                                          list(state.seg_states), state.pos,
+                                          state.ctx, unroll=unroll)
+    logits = layers.logits(cfg, params["embed"], x)
+    return logits, DecodeState(state.pos + 1, tuple(new_states), state.ctx)

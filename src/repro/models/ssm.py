@@ -1,0 +1,278 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Griffin's RG-LRU.
+
+These are the sub-quadratic archs that carry the ``long_500k`` shape: their
+per-token state is sequence-length independent (mLSTM: per-head matrix
+memory; sLSTM: per-head scalars; RG-LRU: a width-d vector).
+
+Numerics: all recurrences run in f32 with log-domain stabilizers (m-state)
+following arXiv:2405.04517; the chunkwise-parallel mLSTM (training path) is
+tested bit-close against the sequential oracle.  RG-LRU trains via
+``jax.lax.associative_scan`` (log-depth — the sequence-parallel story).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared by mLSTM and RG-LRU blocks)
+# ---------------------------------------------------------------------------
+
+def conv1d(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, D), kernel (W, D) depthwise causal: y_t = sum_w k_w x_{t-w}."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    return sum(xp[:, i:i + s] * kernel[w - 1 - i].astype(x.dtype)
+               for i in range(w))
+
+
+def conv1d_step(buf: jnp.ndarray, x: jnp.ndarray, kernel: jnp.ndarray):
+    """Decode step. buf (B, W-1, D) holds previous inputs; x (B, 1, D).
+    Returns (y (B, 1, D), new buf)."""
+    w = kernel.shape[0]
+    hist = jnp.concatenate([buf, x], axis=1)              # (B, W, D)
+    # hist[w-1] is the current token and must meet kernel[0] (see conv1d:
+    # kernel[j] multiplies x_{t-j}), so the kernel is reversed here.
+    y = jnp.einsum("bwd,wd->bd", hist.astype(F32),
+                   kernel[::-1].astype(F32))
+    return y[:, None].astype(x.dtype), hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory) — sequential oracle + chunkwise-parallel training form
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, NH, dh, dh) stabilized matrix memory C~ = C*exp(-m)
+    n: jnp.ndarray   # (B, NH, dh)
+    m: jnp.ndarray   # (B, NH)
+
+    @classmethod
+    def zeros(cls, b, nh, dh):
+        return cls(jnp.zeros((b, nh, dh, dh), F32), jnp.zeros((b, nh, dh), F32),
+                   jnp.full((b, nh), -1e30, F32))
+
+    @classmethod
+    def abstract(cls, b, nh, dh):
+        return cls(jax.ShapeDtypeStruct((b, nh, dh, dh), F32),
+                   jax.ShapeDtypeStruct((b, nh, dh), F32),
+                   jax.ShapeDtypeStruct((b, nh), F32))
+
+
+def mlstm_step(state: MLSTMState, q, k, v, i_raw, f_raw):
+    """One token. q/k/v (B, NH, dh); i_raw/f_raw (B, NH). Returns (h, state)."""
+    lf = jax.nn.log_sigmoid(f_raw.astype(F32))
+    m_new = jnp.maximum(lf + state.m, i_raw.astype(F32))
+    fp = jnp.exp(lf + state.m - m_new)
+    ip = jnp.exp(i_raw.astype(F32) - m_new)
+    k32, v32, q32 = k.astype(F32), v.astype(F32), q.astype(F32)
+    c = fp[..., None, None] * state.c + ip[..., None, None] * (
+        v32[..., :, None] * k32[..., None, :])
+    n = fp[..., None] * state.n + ip[..., None] * k32
+    num = jnp.einsum("bhij,bhj->bhi", c, q32)
+    den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, q32))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, MLSTMState(c, n, m_new)
+
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, state: MLSTMState):
+    """Oracle: scan mlstm_step over time. q/k/v (B, S, NH, dh)."""
+    def step(st, xs):
+        qt, kt, vt, it, ft = xs
+        h, st = mlstm_step(st, qt, kt, vt, it, ft)
+        return st, h
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_raw, f_raw))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state: MLSTMState, chunk: int,
+                    unroll: bool = False):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + inter-chunk state.
+
+    q/k/v: (B, S, NH, dh); i_raw/f_raw: (B, S, NH).  Ragged tails are padded
+    with state-neutral gates (i = -inf: nothing inserted; f = +inf: no decay)
+    so the returned boundary state equals the unpadded sequential state.
+    Matches mlstm_sequential (tests assert allclose).
+    """
+    b, s, nh, dh = q.shape
+    pad = (-s) % chunk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padw) for a in (q, k, v))
+        i_raw = jnp.pad(i_raw, padw[:3], constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, padw[:3], constant_values=1e30)
+    out_s = s
+    s = s + pad
+    ncs = s // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.reshape(b, ncs, chunk, *x.shape[2:]), 1, 0)  # (ncs, B, chunk, ...)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, i_raw, f_raw))
+
+    def one_chunk(st: MLSTMState, xs):
+        qt, kt, vt, it, ft = xs                   # (B, L, NH, ...)
+        qt, kt, vt = (a.astype(F32) for a in (qt, kt, vt))
+        it, ft = it.astype(F32), ft.astype(F32)
+        lf = jax.nn.log_sigmoid(ft)               # (B, L, NH)
+        bcum = jnp.cumsum(lf, axis=1)             # inclusive cumsum b_s
+        g = bcum[:, -1]                           # (B, NH) total decay
+
+        # log-scales: inter a_t = b_t + m_prev ; intra D_ts = b_t - b_s + i_s
+        a_inter = bcum + st.m[:, None, :]                       # (B, L, NH)
+        dmat = (bcum[:, :, None, :] - bcum[:, None, :, :]
+                + it[:, None, :, :])                            # (B, t, s, NH)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_t = jnp.maximum(a_inter, dmat.max(axis=2))            # (B, L, NH)
+
+        w_inter = jnp.exp(a_inter - m_t)                        # (B, L, NH)
+        w_intra = jnp.exp(dmat - m_t[:, :, None, :])            # (B, t, s, NH)
+
+        sqk = jnp.einsum("blhd,bshd->blsh", qt, kt)             # (B, t, s, NH)
+        num = (jnp.einsum("blsh,blsh,bshd->blhd", w_intra, sqk, vt)
+               + w_inter[..., None] * jnp.einsum("blhd,bhed->blhe", qt, st.c))
+        den = (jnp.einsum("blsh,blsh->blh", w_intra, sqk)
+               + w_inter * jnp.einsum("blhd,bhd->blh", qt, st.n))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]                                # (B, L, NH, dh)
+
+        # boundary update
+        scale_s = g[:, None, :] - bcum + it                     # (B, L, NH)
+        m_new = jnp.maximum(g + st.m, scale_s.max(axis=1))
+        w_old = jnp.exp(g + st.m - m_new)
+        w_s = jnp.exp(scale_s - m_new[:, None, :])              # (B, L, NH)
+        c_new = (w_old[..., None, None] * st.c
+                 + jnp.einsum("blh,blhd,blhe->bhde", w_s, vt, kt))
+        n_new = (w_old[..., None] * st.n
+                 + jnp.einsum("blh,blhd->bhd", w_s, kt))
+        return MLSTMState(c_new, n_new, m_new), h
+
+    if unroll:
+        hs = []
+        for j in range(ncs):
+            state, hj = one_chunk(state, jax.tree.map(
+                lambda a: a[j], (qc, kc, vc, ic, fc)))
+            hs.append(hj)
+        hs = jnp.stack(hs)
+    else:
+        state, hs = jax.lax.scan(one_chunk, state, (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, dh)
+    return h[:, :out_s], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory with exponential gating (sequential by construction)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, D) stabilized cell
+    n: jnp.ndarray   # (B, D)
+    m: jnp.ndarray   # (B, D)
+    h: jnp.ndarray   # (B, D) output (enters the recurrence)
+
+    @classmethod
+    def zeros(cls, b, d):
+        z = jnp.zeros((b, d), F32)
+        return cls(z, z, jnp.full((b, d), -1e30, F32), z)
+
+    @classmethod
+    def abstract(cls, b, d):
+        sd = jax.ShapeDtypeStruct((b, d), F32)
+        return cls(sd, sd, sd, sd)
+
+
+def slstm_step(state: SLSTMState, x_gates, r_kernel, nh: int):
+    """x_gates: (B, 4D) preactivations from the input; r_kernel (4, NH, dh, dh)
+    block-diagonal recurrent weights applied to h."""
+    b, d4 = x_gates.shape
+    d = d4 // 4
+    dh = d // nh
+    hprev = state.h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, r_kernel.astype(F32))  # (B,4,NH,dh)
+    gates = x_gates.astype(F32).reshape(b, 4, nh, dh) + rec
+    zt, it, ft, ot = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    zt = jnp.tanh(zt).reshape(b, d)
+    ot = jax.nn.sigmoid(ot).reshape(b, d)
+    it = it.reshape(b, d)
+    lf = jax.nn.log_sigmoid(ft).reshape(b, d)
+    m_new = jnp.maximum(lf + state.m, it)
+    fp, ip = jnp.exp(lf + state.m - m_new), jnp.exp(it - m_new)
+    c = fp * state.c + ip * zt
+    n = fp * state.n + ip
+    h = ot * c / jnp.maximum(n, jnp.exp(-m_new))
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_sequence(x_gates, r_kernel, state: SLSTMState, nh: int):
+    """x_gates (B, S, 4D) -> h (B, S, D). True recurrence: lax.scan over S."""
+    def step(st, xg):
+        return slstm_step(st, xg, r_kernel, nh)
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray   # (B, D) f32
+
+    @classmethod
+    def zeros(cls, b, d):
+        return cls(jnp.zeros((b, d), F32))
+
+    @classmethod
+    def abstract(cls, b, d):
+        return cls(jax.ShapeDtypeStruct((b, d), F32))
+
+
+def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
+          lam: jnp.ndarray, c: float, state: RGLRUState):
+    """Sequence form via associative scan (log-depth).
+
+    x, r_gate, i_gate: (B, S, D) (gates are pre-sigmoid); lam: (D,) raw Λ.
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(lam) * sigmoid(r_t)).
+    """
+    log_a = (-c * jax.nn.softplus(lam.astype(F32))
+             * jax.nn.sigmoid(r_gate.astype(F32)))            # (B, S, D)
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_gate.astype(F32)) * x.astype(F32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    # prepend the carry as the first element, scan, drop it
+    a_all = jnp.concatenate([jnp.ones_like(state.h[:, None]), a], axis=1)
+    b_all = jnp.concatenate([state.h[:, None], b_t], axis=1)
+    _, h_all = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h = h_all[:, 1:]
+    return h.astype(x.dtype), RGLRUState(h_all[:, -1])
+
+
+def rglru_step(x, r_gate, i_gate, lam, c: float, state: RGLRUState):
+    """One decode token: x/r/i (B, 1, D)."""
+    log_a = (-c * jax.nn.softplus(lam.astype(F32))
+             * jax.nn.sigmoid(r_gate[:, 0].astype(F32)))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_gate[:, 0].astype(F32)) * x[:, 0].astype(F32)
+    h = a * state.h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return h[:, None].astype(x.dtype), RGLRUState(h)

@@ -1,0 +1,68 @@
+"""AdamW with fp32 state over (possibly bf16) params + global-norm clipping.
+
+State layout mirrors the param pytree (m, v in f32, sharded identically to
+the params — under FSDP the optimizer state is automatically ZeRO-sharded
+because its shardings are inherited from the param shardings).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def abstract(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, F32), params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), zeros, zeros)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def update(params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1, max_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_norm)
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(F32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            u = u + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), gnorm

@@ -1,0 +1,27 @@
+"""LR schedules: linear warmup + cosine, and WSD (warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (floor_frac + (1 - floor_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, floor_frac: float = 0.05):
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                    0, 1)
+    dec = peak_lr * (1 - (1 - floor_frac) * prog)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < decay_start, peak_lr, dec))

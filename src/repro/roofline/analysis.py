@@ -1,0 +1,154 @@
+"""Three-term roofline from a compiled (unexecuted) XLA artifact.
+
+  compute term    = HLO_FLOPs_per_chip / PEAK_FLOPS
+  memory term     = HLO_bytes_per_chip / HBM_BW
+  collective term = sum over collectives of per-chip link bytes / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD module is the
+per-device program, so its numbers are already per chip).  Collective bytes
+are not in cost_analysis: we parse the optimized HLO text and apply ring
+factors per op kind (DESIGN.md §9).
+
+Hardware constants (TPU v5e-class, per chip) are module-level so §Perf can
+sweep them.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12   # bf16
+HBM_BW = 819e9        # bytes/s
+ICI_BW = 50e9         # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# result-size multipliers per op for per-chip ring traffic, as a function of
+# group size n:  bytes_moved = factor(n) * result_bytes
+_FACTORS = {
+    "all-reduce":         lambda n: 2.0 * (n - 1) / n,
+    "all-gather":         lambda n: (n - 1) / n,       # result is gathered
+    "reduce-scatter":     lambda n: float(n - 1),      # result is the shard
+    "all-to-all":         lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_OP_RE = re.compile(
+    r"=\s+([a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?"            # result shape
+    r"|\([^=]*?\))\s+"                                     # or tuple shape
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))     # [num_groups, group_size]
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    per_op: dict = field(default_factory=dict)   # kind -> (count, bytes)
+    total_bytes: float = 0.0
+
+    def add(self, kind: str, nbytes: float):
+        c, b = self.per_op.get(kind, (0, 0.0))
+        self.per_op[kind] = (c + 1, b + nbytes)
+        self.total_bytes += nbytes
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-chip link bytes summed over every collective in the module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        nbytes = _shape_bytes(shape_str) * _FACTORS[kind](n)
+        stats.add(kind, nbytes)
+    return stats
+
+
+def roofline(compiled, model_flops: float | None = None) -> dict:
+    """Derive the three terms + bottleneck from a compiled artifact."""
+    cost = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    stats = collective_bytes(compiled.as_text())
+
+    t_compute = hlo_flops / PEAK_FLOPS
+    t_memory = hlo_bytes / HBM_BW
+    t_collective = stats.total_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    out = {
+        "hlo_flops_per_chip": hlo_flops,
+        "hlo_bytes_per_chip": hlo_bytes,
+        "collective_bytes_per_chip": stats.total_bytes,
+        "collectives": {k: {"count": c, "bytes": b}
+                        for k, (c, b) in sorted(stats.per_op.items())},
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": bottleneck,
+        "bound_time_s": max(terms.values()),
+        "memory_analysis": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_bytes": (ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes),
+        },
+    }
+    if model_flops:
+        out["model_flops_per_chip"] = model_flops
+        out["useful_flops_frac"] = (model_flops / hlo_flops
+                                    if hlo_flops else 0.0)
+        # roofline fraction: useful work per chip over the machine-bound time
+        out["roofline_frac"] = (model_flops / PEAK_FLOPS
+                                / max(max(terms.values()), 1e-30))
+    return out
+
+
+def format_row(name: str, r: dict) -> str:
+    mf = r.get("roofline_frac")
+    return (f"| {name} | {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f}"
+            f" | {r['t_collective_s']*1e3:.2f} | {r['bottleneck']}"
+            f" | {r.get('useful_flops_frac', 0) * 100:.0f}%"
+            f" | {(mf or 0) * 100:.1f}% |")

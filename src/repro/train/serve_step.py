@@ -1,0 +1,58 @@
+"""Serving programs lowered by the dry-run and used by examples/serve.py:
+
+  prefill_step — consume a full prompt, build the resident decode state.
+  decode_step  — one token for the whole batch against resident state.
+  sample       — greedy / temperature sampling from the last-token logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def prefill_step(cfg, params, batch: dict, s_max: int, q_chunk: int = 0):
+    """batch: {tokens (B, S), [ctx]} -> (first sampled token, DecodeState)."""
+    logits, state = lm.prefill(cfg, params, batch["tokens"],
+                               batch.get("ctx"), s_max=s_max,
+                               q_chunk=q_chunk)
+    return logits, state
+
+
+def decode_step(cfg, params, token: jnp.ndarray, state: lm.DecodeState):
+    """token (B, 1) -> (logits (B, 1, V), state)."""
+    return lm.decode_step(cfg, params, token, state)
+
+
+def sample(logits: jnp.ndarray, key=None, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    g = jax.random.gumbel(key, logits[:, -1].shape, jnp.float32)
+    return jnp.argmax(logits[:, -1] / temperature + g, axis=-1).astype(
+        jnp.int32)[:, None]
+
+
+def generate(cfg, params, prompt: jnp.ndarray, n_new: int,
+             ctx: jnp.ndarray | None = None, temperature: float = 0.0,
+             key=None):
+    """Greedy/temperature generation loop (example-scale, jit per step).
+
+    Logits are sliced to the true vocab (the table is padded to 256-multiples
+    for TP; pad ids must never be sampled)."""
+    s_max = prompt.shape[1] + n_new
+    batch = {"tokens": prompt}
+    if ctx is not None:
+        batch["ctx"] = ctx
+    logits, state = prefill_step(cfg, params, batch, s_max=s_max)
+    logits = logits[..., :cfg.vocab]
+    tok = sample(logits, key, temperature)
+    out = [tok]
+    for i in range(n_new - 1):
+        if key is not None:
+            key = jax.random.fold_in(key, i)
+        logits, state = decode_step(cfg, params, tok, state)
+        tok = sample(logits[..., :cfg.vocab], key, temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

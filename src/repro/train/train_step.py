@@ -1,0 +1,149 @@
+"""The lowered training program: grad + AdamW update (+ optional microbatch
+accumulation and 1-bit inter-pod gradient compression).
+
+This is the function the multi-pod dry-run lowers for every train-shape
+cell; all sharding is carried by in_shardings/out_shardings built from the
+model's ParamDefs (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.models import lm
+from repro.optim import adamw, schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(cfg, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return TrainState(params, adamw.init(params))
+
+
+def abstract_state(cfg) -> TrainState:
+    params = lm.abstract_params(cfg)
+    return TrainState(params, adamw.abstract(params))
+
+
+def state_pspecs(cfg, rules):
+    pspec = lm.param_pspecs(cfg, rules)
+    from jax.sharding import PartitionSpec as P
+    return TrainState(pspec, adamw.AdamWState(P(), pspec, pspec))
+
+
+def _grads(cfg, params, batch, q_chunk, microbatch: int,
+           unroll: bool = False, acc_dtype=jnp.float32):
+    """value_and_grad with optional sequential microbatch accumulation.
+
+    ``acc_dtype=bf16`` halves the resident accumulator (measured §Perf: the
+    f32 accumulator + its scan double-buffer is a multi-GiB slab at 100B
+    scale); each microbatch grad is produced in f32 and rounded once on
+    accumulate, so the rounding error is O(microbatch) ULPs, not O(steps).
+    """
+    if microbatch <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(cfg, p, batch, q_chunk=q_chunk,
+                                 unroll=unroll),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    b = batch["tokens"].shape[0]
+    assert b % microbatch == 0, (b, microbatch)
+    mb = b // microbatch
+    parts = jax.tree.map(
+        lambda x: x.reshape(microbatch, mb, *x.shape[1:]), batch)
+
+    def body(carry, mb_batch):
+        acc, loss_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(cfg, p, mb_batch, q_chunk=q_chunk),
+            has_aux=True)(params)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(acc_dtype), acc, grads)
+        return (acc, loss_acc + loss), metrics
+
+    zero = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, acc_dtype), params)
+    (gsum, loss_sum), metrics = jax.lax.scan(body, (zero, 0.0), parts)
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / microbatch),
+                         gsum)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum / microbatch, metrics, grads
+
+
+def _onebit_pod_allreduce(grads, pod_axis: str = "pod"):
+    """Majority-vote 1-bit gradient exchange across the pod axis.
+
+    Runs inside shard_map(auto={data, model}): each pod packs sign bits
+    (32x smaller than f32), all-gathers the planes over the slow inter-pod
+    axis, and reconstructs by majority vote scaled by the mean of per-pod
+    L1 scales.  The only inter-pod traffic is uint32 planes + one scalar
+    per tensor — the paper's bulk-XOR-domain economy applied to DCN.
+    """
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(g32))
+        flat = g32.reshape(-1)
+        planes = bitpack.pack_bits(bitpack.pad_to_word(flat))
+        all_planes = jax.lax.all_gather(planes, pod_axis)      # (P, W)
+        all_scales = jax.lax.all_gather(scale, pod_axis)       # (P,)
+        votes = bitpack.unpack_bits(all_planes, flat.shape[0])  # (P, N) ±1
+        maj = jnp.sign(jnp.sum(votes, axis=0) + 0.5)
+        out = (jnp.mean(all_scales) * maj).reshape(g.shape)
+        return out.astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def train_step(cfg, state: TrainState, batch: dict, step: jnp.ndarray, *,
+               peak_lr: float = 3e-4, warmup: int = 100, total: int = 10000,
+               q_chunk: int = 0, microbatch: int = 1,
+               grad_compress: str = "none", mesh=None, rules=None,
+               unroll: bool = False, acc_dtype=jnp.float32):
+    """One optimizer step. Returns (state, metrics).
+
+    grad_compress="onebit_pod" wraps the grad computation in shard_map over
+    the pod axis and exchanges 1-bit gradients inter-pod (multi-pod meshes
+    only; DESIGN.md §4).
+    """
+    if grad_compress == "onebit_pod":
+        assert mesh is not None and "pod" in mesh.axis_names
+        from jax.sharding import PartitionSpec as P
+
+        def podwise(params, pod_batch):
+            loss, metrics, grads = _grads(cfg, params, pod_batch, q_chunk,
+                                          microbatch, unroll, acc_dtype)
+            grads = _onebit_pod_allreduce(grads)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree.map(
+                lambda m: jax.lax.pmean(m.astype(jnp.float32), "pod"), metrics)
+            return loss, metrics, grads
+
+        # manual over "pod" only; data/model stay auto-partitioned inside.
+        in_specs = (jax.tree.map(lambda _: P(), state.params),
+                    jax.tree.map(lambda _: P("pod"), batch))
+        out_specs = (P(),
+                     {"ce": P(), "aux": P(), "tokens": P()},
+                     jax.tree.map(lambda _: P(), state.params))
+        loss, metrics, grads = jax.shard_map(
+            podwise, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names={"pod"}, check_vma=False,
+        )(state.params, batch)
+    else:
+        loss, metrics, grads = _grads(cfg, state.params, batch, q_chunk,
+                                      microbatch, unroll, acc_dtype)
+
+    lr = schedule.warmup_cosine(step, peak_lr=peak_lr, warmup=warmup,
+                                total=total)
+    new_params, opt, gnorm = adamw.update(state.params, grads, state.opt, lr)
+    metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+    return TrainState(new_params, opt), metrics

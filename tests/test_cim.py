@@ -1,0 +1,91 @@
+"""Circuit-level reproduction tests: truth tables (Fig. 4), current levels,
+Monte-Carlo robustness (Fig. 5), array scalability, speedup model (Fig. 6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim, logic, montecarlo, speedup
+
+TT = {
+    "xor":  {(0, 0): 0, (0, 1): 1, (1, 0): 1, (1, 1): 0},
+    "xnor": {(0, 0): 1, (0, 1): 0, (1, 0): 0, (1, 1): 1},
+    "and":  {(0, 0): 0, (0, 1): 0, (1, 0): 0, (1, 1): 1},
+    "or":   {(0, 0): 0, (0, 1): 1, (1, 0): 1, (1, 1): 1},
+    "nand": {(0, 0): 1, (0, 1): 1, (1, 0): 1, (1, 1): 0},
+    "nor":  {(0, 0): 1, (0, 1): 0, (1, 0): 0, (1, 1): 0},
+}
+
+
+@pytest.mark.parametrize("op", sorted(TT))
+def test_truth_tables(op):
+    for a, b, out in logic.truth_table(logic.op_table()[op]):
+        assert out == TT[op][(a, b)], (op, a, b)
+
+
+def test_sl_current_levels_match_paper():
+    """Fig. 4(d): I_00 ~ 0.1 nA, I_01 ~ 7.87 uA, I_11 ~ 15.7 uA on the 3x3."""
+    st = cim.make_array(jnp.array([[1, 0, 1], [0, 0, 1], [1, 1, 0]]))
+    i = np.asarray(cim.sl_currents(st, jnp.array([True, True, False])))
+    assert abs(i[1] - 0.1e-9) < 1e-9          # '00' column
+    np.testing.assert_allclose(i[0], 7.87e-6, rtol=0.02)   # '01'
+    np.testing.assert_allclose(i[2], 15.7e-6, rtol=0.02)   # '11'
+
+
+def test_array_compute_and_readback():
+    bits = jnp.array([[1, 0, 1, 0], [0, 0, 1, 1], [1, 1, 0, 0]])
+    st = cim.make_array(bits)
+    want_xor = np.asarray(bits[0] ^ bits[1], bool)
+    assert np.array_equal(np.asarray(cim.compute(st, 0, 1, "xor")), want_xor)
+    assert np.array_equal(np.asarray(cim.compute(st, 0, 1, "xnor")), ~want_xor)
+    for r in range(3):
+        assert np.array_equal(np.asarray(cim.read(st, r)),
+                              np.asarray(bits[r], bool))
+
+
+def test_write_then_compute():
+    st = cim.make_array(jnp.zeros((3, 4)))
+    st = cim.write(st, 0, 1, 1)
+    st = cim.write(st, 1, 2, 1)
+    out = np.asarray(cim.compute(st, 0, 1, "xor"))
+    assert np.array_equal(out, [False, True, True, False])
+
+
+def test_montecarlo_5000_points_no_errors():
+    """Paper §V: levels stay separable under LRS/HRS (3sig=10%) + Vt (25 mV)."""
+    res = montecarlo.run(jax.random.PRNGKey(0), samples=5000, rows=3)
+    assert float(res.error_rate.max()) == 0.0
+    means = np.asarray(res.i_sl.mean(0))
+    assert means[0] < 1e-9 and 6e-6 < means[1] < 9e-6 and 1.4e-5 < means[2] < 1.7e-5
+    # worst-case sense margins stay positive
+    assert float(res.margins.min()) > 0
+
+
+def test_max_rows_scales_with_on_off_ratio():
+    """Fig. 5(b): larger HRS/LRS ratio -> more allowed rows; supports the
+    paper's 512-row bank at nominal device values."""
+    ratios = jnp.array([1e4, 1e5, 3e5])
+    rows = np.asarray(montecarlo.max_rows_sweep(ratios))
+    assert (np.diff(rows) < 0).all()          # vary LRS at fixed HRS
+    assert float(montecarlo.max_rows()) >= 512
+
+
+def test_speedup_formula():
+    """Paper: N_O = 64 CPU baseline gives ~64x; speedup is monotone in N_O
+    and saturates below the ideal limit."""
+    s64 = float(speedup.xnornet_speedup(64))
+    assert 60 < s64 < 64.1
+    n_os = jnp.array([64, 256, 1024, 8192, speedup.tpu_n_o()])
+    ss = np.asarray(speedup.xnornet_speedup(n_os))
+    assert (np.diff(ss) > 0).all()
+    assert ss[-1] < 256 * 14**2 * 9 / 9  # bounded by c*N_W
+
+
+def test_table1_latency_ranking():
+    """This work: single-cycle — beats every other CMOS-compatible design."""
+    n = 10**6
+    ours = speedup.design_cycles("this_work", n)
+    for d in ["pinatubo", "xorim", "cmos_memristive", "felix"]:
+        assert speedup.design_cycles(d, n) >= 2 * ours
+    assert speedup.design_cycles("sixor", n) == ours  # memristor-only rival

@@ -1,0 +1,162 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle vs
+float-domain semantics, swept over shapes/dtypes, plus hypothesis properties
+on the bit-domain invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(m, k, dtype=np.float32):
+    return RNG.standard_normal((m, k)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# bitpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 32), (4, 64), (3, 5, 96)])
+def test_pack_unpack_roundtrip(shape):
+    x = _rand(int(np.prod(shape[:-1])), shape[-1]).reshape(shape)
+    p = bitpack.pack_bits(jnp.asarray(x))
+    u = bitpack.unpack_bits(p)
+    assert np.array_equal(np.asarray(u), np.where(x >= 0, 1.0, -1.0))
+
+
+@given(st.integers(1, 8), st.integers(1, 130))
+@settings(max_examples=30, deadline=None)
+def test_pack_roundtrip_property(m, k):
+    x = RNG.standard_normal((m, k)).astype(np.float32)
+    xp = bitpack.pad_to_word(jnp.asarray(x))
+    u = bitpack.unpack_bits(bitpack.pack_bits(xp), k)
+    assert np.array_equal(np.asarray(u), np.where(x >= 0, 1.0, -1.0))
+
+
+def test_binarize_alpha():
+    x = _rand(5, 50)
+    _, alpha = bitpack.binarize(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(alpha), np.abs(x).mean(-1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# xnor gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(8, 16, 64), (130, 70, 100), (1, 1, 32),
+                                   (33, 5, 31), (256, 128, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_xnor_gemm_matches_float_oracle(m, n, k, dtype):
+    a, b = _rand(m, k, dtype), _rand(n, k, dtype)
+    pa = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(a)))
+    pb = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(b)))
+    want = ref.xnor_dot_float(jnp.asarray(a), jnp.asarray(b))
+    got_ref = ops.xnor_matmul(pa, pb, k, impl="ref")
+    got_pl = ops.xnor_matmul(pa, pb, k, impl="interpret", bm=8, bn=8, bk=2)
+    assert np.array_equal(np.asarray(want), np.asarray(got_ref))
+    assert np.array_equal(np.asarray(want), np.asarray(got_pl))
+
+
+@pytest.mark.parametrize("blocks", [dict(bm=8, bn=8, bk=1),
+                                    dict(bm=16, bn=32, bk=4),
+                                    dict(bm=128, bn=128, bk=8)])
+def test_xnor_gemm_block_shapes(blocks):
+    a, b = _rand(64, 256), _rand(48, 256)
+    pa = bitpack.pack_bits(jnp.asarray(a))
+    pb = bitpack.pack_bits(jnp.asarray(b))
+    want = ops.xnor_matmul(pa, pb, 256, impl="ref")
+    got = ops.xnor_matmul(pa, pb, 256, impl="interpret", **blocks)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 80))
+@settings(max_examples=20, deadline=None)
+def test_xnor_gemm_bounds_property(m, n, k):
+    """|dot| <= K and dot parity == K parity (±1 sums)."""
+    a, b = RNG.standard_normal((m, k)), RNG.standard_normal((n, k))
+    pa = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(a, jnp.float32)))
+    pb = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(b, jnp.float32)))
+    d = np.asarray(ops.xnor_matmul(pa, pb, k, impl="ref"))
+    assert np.abs(d).max() <= k
+    assert ((d - k) % 2 == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# fused pack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k", [(4, 64), (7, 50), (256, 1024), (1, 32)])
+def test_fused_pack(m, k):
+    x = jnp.asarray(_rand(m, k))
+    p1, a1 = ops.binarize(x, impl="ref")
+    p2, a2 = ops.binarize(x, impl="interpret", bm=4)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# parity digest
+# ---------------------------------------------------------------------------
+
+def test_digest_interpret_matches_ref():
+    buf = jnp.asarray(RNG.integers(0, 2**32, 5000, dtype=np.uint32))
+    assert np.array_equal(np.asarray(ops.digest(buf, impl="ref")),
+                          np.asarray(ops.digest(buf, impl="interpret")))
+
+
+@given(st.integers(0, 4999), st.integers(0, 31))
+@settings(max_examples=25, deadline=None)
+def test_digest_detects_any_single_bit_flip(pos, bit):
+    buf = jnp.asarray(RNG.integers(0, 2**32, 5000, dtype=np.uint32))
+    d0 = np.asarray(ops.digest(buf, impl="ref"))
+    flipped = buf.at[pos].set(buf[pos] ^ np.uint32(1 << bit))
+    d1 = np.asarray(ops.digest(flipped, impl="ref"))
+    # XOR linearity: exactly one digest bit differs
+    diff = d0 ^ d1
+    assert sum(int(x).bit_count() for x in diff) == 1
+
+
+def test_digest_order_sensitivity_is_columnwise():
+    """Digest folds rows; swapping two words in the same column is invisible
+    (XOR commutes) — documented property, not a defect of parity checking
+    (the paper's check is positional row-vs-row, ours is stream parity)."""
+    buf = jnp.arange(512, dtype=jnp.uint32)
+    swapped = buf.at[0].set(buf[128]).at[128].set(buf[0])
+    assert np.array_equal(np.asarray(ops.digest(buf)), np.asarray(ops.digest(swapped)))
+
+
+# ---------------------------------------------------------------------------
+# cipher
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 3000), st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cipher_involution_property(n, ctr):
+    buf = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    key = jnp.asarray(RNG.integers(0, 2**32, 2, dtype=np.uint32))
+    enc = ops.stream_cipher(buf, key, counter=ctr, impl="ref")
+    dec = ops.stream_cipher(enc, key, counter=ctr, impl="ref")
+    assert np.array_equal(np.asarray(dec), np.asarray(buf))
+
+
+def test_cipher_interpret_matches_ref_and_scrambles():
+    buf = jnp.asarray(RNG.integers(0, 2**32, 4096, dtype=np.uint32))
+    key = jnp.array([123, 456], dtype=jnp.uint32)
+    c1 = ops.stream_cipher(buf, key, counter=7, impl="ref")
+    c2 = ops.stream_cipher(buf, key, counter=7, impl="interpret")
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+    assert not np.array_equal(np.asarray(c1), np.asarray(buf))
+    # different key/counter -> different stream
+    c3 = ops.stream_cipher(buf, key, counter=8, impl="ref")
+    assert not np.array_equal(np.asarray(c1), np.asarray(c3))
+
+
+def test_cipher_rejects_non_uint32():
+    with pytest.raises(TypeError):
+        ops.stream_cipher(jnp.zeros(4, jnp.float32), jnp.zeros(2, jnp.uint32))

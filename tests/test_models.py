@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (reduced configs): forward shape/NaN, loss +
+grad, prefill/decode consistency, XNOR-quant variant, MoE properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm, moe
+
+ARCHS = sorted(configs.ALL)
+
+
+def _setup(name, B=2, S=12, **over):
+    cfg = configs.ALL[name].smoke(**over)
+    key = jax.random.PRNGKey(abs(hash(name)) % 2**31)
+    params = lm.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    ctx = None
+    if cfg.n_ctx_tokens:
+        ctx = jax.random.normal(key, (B, cfg.n_ctx_tokens, cfg.d_model),
+                                jnp.float32) * 0.1
+    return cfg, params, tokens, ctx
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name):
+    B, S = 2, 12
+    cfg, params, tokens, ctx = _setup(name, B, S)
+    logits, aux = lm.forward(cfg, params, tokens, ctx)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_grad_finite(name):
+    B, S = 2, 12
+    cfg, params, tokens, ctx = _setup(name, B, S)
+    batch = {"tokens": tokens,
+             "labels": jnp.concatenate(
+                 [tokens[:, 1:], -jnp.ones((B, 1), jnp.int32)], 1)}
+    if ctx is not None:
+        batch["ctx"] = ctx
+    (loss, metrics), g = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x in jax.tree.leaves(g)))
+    assert np.isfinite(float(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_matches_forward(name):
+    """Algorithmic equivalence of the serve path (f32 so recurrent-layer
+    bf16 accumulation noise doesn't mask logic bugs; no-drop capacity so
+    MoE routing is identical across both paths)."""
+    B, S, s0 = 2, 12, 8
+    cfg, params, tokens, ctx = _setup(name, B, S, capacity_factor=8.0,
+                                      dtype=jnp.float32)
+    full_logits, _ = lm.forward(cfg, params, tokens, ctx)
+    lg, st = lm.prefill(cfg, params, tokens[:, :s0], ctx, s_max=S + 2)
+    outs = [lg]
+    for t in range(s0, S):
+        lg, st = lm.decode_step(cfg, params, tokens[:, t:t+1], st)
+        outs.append(lg)
+    dec = np.asarray(jnp.concatenate(outs, 1), np.float32)
+    want = np.asarray(full_logits[:, s0 - 1:], np.float32)
+    rel = np.abs(dec - want).max() / max(np.abs(want).max(), 1e-6)
+    assert rel < 1e-3, rel
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b", "xlstm-350m",
+                                  "moonshot-v1-16b-a3b"])
+def test_xnor_quant_variant_trains(name):
+    """The paper's technique as a config axis: binary projections still give
+    finite loss/grads (STE path)."""
+    B, S = 2, 12
+    cfg, params, tokens, ctx = _setup(name, B, S, quant="xnor")
+    assert cfg.quant == "xnor"
+    batch = {"tokens": tokens,
+             "labels": jnp.concatenate(
+                 [tokens[:, 1:], -jnp.ones((B, 1), jnp.int32)], 1)}
+    (loss, _), g = jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    leaves = [x for x in jax.tree.leaves(g)]
+    assert all(np.isfinite(np.asarray(x, np.float32)).all() for x in leaves)
+
+
+def test_i8_kv_cache_decode_accuracy():
+    """int8 fixed-point decode cache (§Perf iter 7): <2% rel logit error."""
+    name = "qwen3-4b"
+    cfg, params, tokens, ctx = _setup(name, 2, 12, dtype=jnp.float32)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype="i8")
+    full_logits, _ = lm.forward(cfg, params, tokens, ctx)
+    lg, st = lm.prefill(cfg, params, tokens[:, :8], ctx, s_max=14)
+    outs = [lg]
+    for t in range(8, 12):
+        lg, st = lm.decode_step(cfg, params, tokens[:, t:t+1], st)
+        outs.append(lg)
+    dec = np.asarray(jnp.concatenate(outs, 1), np.float32)
+    want = np.asarray(full_logits[:, 7:], np.float32)
+    rel = np.abs(dec - want).max() / np.abs(want).max()
+    assert rel < 2e-2, rel
+    assert jax.tree.leaves(st.seg_states)[0].dtype == jnp.int8
+
+
+def test_chunked_attention_matches_full():
+    cfg, params, tokens, ctx = _setup("qwen2-7b", 2, 16)
+    full, _ = lm.forward(cfg, params, tokens, ctx, q_chunk=0)
+    chunked, _ = lm.forward(cfg, params, tokens, ctx, q_chunk=4)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(chunked, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_local_window_attention_masks_past():
+    """RecurrentGemma local layers must not see beyond the window."""
+    cfg, params, tokens, _ = _setup("recurrentgemma-2b", 1, 40)
+    # perturb a token far outside every window; logits at the end must shift
+    # by (much) less than perturbing a token inside the window
+    t2 = tokens.at[0, 1].set((tokens[0, 1] + 7) % cfg.vocab)
+    t3 = tokens.at[0, 38].set((tokens[0, 38] + 7) % cfg.vocab)
+    base, _ = lm.forward(cfg, params, tokens)
+    far, _ = lm.forward(cfg, params, t2)
+    near, _ = lm.forward(cfg, params, t3)
+    d_far = np.abs(np.asarray(base[0, -1] - far[0, -1], np.float32)).max()
+    d_near = np.abs(np.asarray(base[0, -1] - near[0, -1], np.float32)).max()
+    assert d_near > d_far  # recurrent path may carry some far influence
+
+
+def test_moe_capacity_and_load_balance():
+    cfg = configs.ALL["moonshot-v1-16b-a3b"].smoke()
+    key = jax.random.PRNGKey(3)
+    d, e = cfg.d_model, cfg.n_experts
+    p = {"router": jax.random.normal(key, (d, e)) * 0.02,
+         "w1": jax.random.normal(key, (e, d, cfg.d_ff_expert), cfg.dtype) * 0.02,
+         "w3": jax.random.normal(key, (e, d, cfg.d_ff_expert), cfg.dtype) * 0.02,
+         "w2": jax.random.normal(key, (e, cfg.d_ff_expert, d), cfg.dtype) * 0.02}
+    x = jax.random.normal(key, (2, 64, d), cfg.dtype)
+    y, aux = moe.moe_ffn(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz, == 1 if balanced
+
+
+def test_moe_respects_capacity_drop_semantics():
+    """Force all tokens to one expert: overflow must be dropped (residual
+    carries them), output for dropped tokens is exactly zero."""
+    cfg = dataclasses.replace(configs.ALL["llama4-scout-17b-a16e"].smoke(),
+                              capacity_factor=0.25, top_k=1)
+    key = jax.random.PRNGKey(4)
+    d, e = cfg.d_model, cfg.n_experts
+    router = jnp.zeros((d, e)).at[:, 0].set(100.0)  # everyone -> expert 0
+    p = {"router": router,
+         "w1": jnp.ones((e, d, cfg.d_ff_expert), cfg.dtype) * 0.01,
+         "w3": jnp.ones((e, d, cfg.d_ff_expert), cfg.dtype) * 0.01,
+         "w2": jnp.ones((e, cfg.d_ff_expert, d), cfg.dtype) * 0.01}
+    x = jax.random.normal(key, (1, 32, d), cfg.dtype) + 1.0
+    y, _ = moe.moe_ffn(cfg, p, x)
+    ynorm = np.asarray(jnp.sum(jnp.abs(y.astype(jnp.float32)), axis=-1))[0]
+    kept = int((ynorm > 1e-3).sum())
+    cap = moe.capacity(cfg, 32)
+    assert kept == cap, (kept, cap)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_param_specs_cover_params(name):
+    cfg = configs.ALL[name]
+    defs = lm.param_defs(cfg)
+    ab = lm.abstract_params(cfg)
+    specs = lm.param_pspecs(cfg, {"fsdp": "data", "tp": "model", "ep": "model"})
+    assert jax.tree.structure(ab) == jax.tree.structure(specs)
+    for leaf, spec in zip(jax.tree.leaves(ab), jax.tree.leaves(specs)):
+        assert len(spec) <= len(leaf.shape)

@@ -1,0 +1,114 @@
+"""Recurrent-mixer math: chunkwise mLSTM vs sequential oracle, RG-LRU
+associative scan vs stepwise, conv1d train/decode agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+RNG = np.random.default_rng(1)
+
+
+def _mk(b, s, nh, dh):
+    q = jnp.asarray(RNG.standard_normal((b, s, nh, dh)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, nh, dh)), jnp.float32) / np.sqrt(dh)
+    v = jnp.asarray(RNG.standard_normal((b, s, nh, dh)), jnp.float32)
+    i = jnp.asarray(RNG.standard_normal((b, s, nh)) * 2, jnp.float32)
+    f = jnp.asarray(RNG.standard_normal((b, s, nh)) * 2 + 2, jnp.float32)
+    return q, k, v, i, f
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32, 7])
+def test_mlstm_chunkwise_matches_sequential(chunk):
+    b, s, nh, dh = 2, 32, 3, 8
+    q, k, v, i, f = _mk(b, s, nh, dh)
+    st0 = ssm.MLSTMState.zeros(b, nh, dh)
+    h_seq, st_seq = ssm.mlstm_sequential(q, k, v, i, f, st0)
+    h_ch, st_ch = ssm.mlstm_chunkwise(q, k, v, i, f, st0, chunk)
+    np.testing.assert_allclose(np.asarray(h_seq), np.asarray(h_ch),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_seq.c), np.asarray(st_ch.c),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_state_continuation():
+    b, s, nh, dh = 2, 32, 2, 8
+    q, k, v, i, f = _mk(b, s, nh, dh)
+    st0 = ssm.MLSTMState.zeros(b, nh, dh)
+    h_all, _ = ssm.mlstm_sequential(q, k, v, i, f, st0)
+    h1, st1 = ssm.mlstm_chunkwise(q[:, :16], k[:, :16], v[:, :16],
+                                  i[:, :16], f[:, :16], st0, 8)
+    h2, _ = ssm.mlstm_chunkwise(q[:, 16:], k[:, 16:], v[:, 16:],
+                                i[:, 16:], f[:, 16:], st1, 8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h_all), rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_grad_finite_through_chunkwise():
+    b, s, nh, dh = 1, 16, 2, 4
+    q, k, v, i, f = _mk(b, s, nh, dh)
+
+    def loss(q):
+        h, _ = ssm.mlstm_chunkwise(q, k, v, i, f,
+                                   ssm.MLSTMState.zeros(b, nh, dh), 8)
+        return jnp.sum(h * h)
+    g = jax.grad(loss)(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_rglru_scan_matches_steps():
+    b, s, d = 2, 24, 16
+    x, r, i = (jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+               for _ in range(3))
+    lam = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    h_par, st_par = ssm.rglru(x, r, i, lam, 8.0, ssm.RGLRUState.zeros(b, d))
+    st = ssm.RGLRUState.zeros(b, d)
+    hs = []
+    for t in range(s):
+        ht, st = ssm.rglru_step(x[:, t:t+1], r[:, t:t+1], i[:, t:t+1],
+                                lam, 8.0, st)
+        hs.append(ht)
+    np.testing.assert_allclose(np.asarray(h_par),
+                               np.asarray(jnp.concatenate(hs, 1)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_par.h), np.asarray(st.h),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rglru_decay_bounded():
+    """|a_t| < 1 => bounded state for bounded input (stability invariant)."""
+    b, s, d = 1, 512, 8
+    x = jnp.ones((b, s, d))
+    r = jnp.full((b, s, d), 5.0)
+    i = jnp.zeros((b, s, d))
+    lam = jnp.ones((d,))
+    h, _ = ssm.rglru(x, r, i, lam, 8.0, ssm.RGLRUState.zeros(b, d))
+    assert np.isfinite(np.asarray(h)).all()
+    assert np.abs(np.asarray(h)).max() < 100
+
+
+def test_conv1d_step_matches_sequence():
+    b, s, d, w = 2, 10, 6, 4
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    kern = jnp.asarray(RNG.standard_normal((w, d)), jnp.float32)
+    y_full = ssm.conv1d(x, kern)
+    buf = jnp.zeros((b, w - 1, d))
+    ys = []
+    for t in range(s):
+        yt, buf = ssm.conv1d_step(buf, x[:, t:t+1], kern)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_slstm_finite_and_gated():
+    b, s, d, nh = 2, 64, 16, 4
+    xg = jnp.asarray(RNG.standard_normal((b, s, 4 * d)), jnp.float32)
+    rk = jnp.asarray(RNG.standard_normal((4, nh, d // nh, d // nh)) * 0.1,
+                     jnp.float32)
+    h, st = ssm.slstm_sequence(xg, rk, ssm.SLSTMState.zeros(b, d), nh)
+    assert np.isfinite(np.asarray(h)).all()
+    assert np.abs(np.asarray(h)).max() <= 1.0 + 1e-5  # |o*c/n| <= 1 with tanh z
