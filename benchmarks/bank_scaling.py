@@ -1,0 +1,74 @@
+"""Bank-scaling throughput: ops/cycle vs bank count (DESIGN.md §10).
+
+The paper's throughput argument is architectural: one sense cycle computes a
+row-wide XOR/XNOR, and independent banks multiply that by B.  This benchmark
+drives both engine views at B in {1, 8, 64}:
+
+* circuit path — banked analog simulation (`CimEngine.simulate`): wall-clock
+  per traced call and modeled ops/cycle, which must scale linearly in B;
+* engine path — the packed `bulk_op` kernel over a fixed buffer: modeled
+  cycle count, which must fall as 1/B.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import BankGeometry, CimEngine
+
+BANK_COUNTS = (1, 8, 64)
+PAIRS = 8            # row-pairs scheduled per bank (P sense cycles)
+COLS = 128           # bank row width (bits)
+BUF_WORDS = 1 << 16  # engine-path payload: 64k uint32 words = 2 Mbit
+
+
+def run() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+    buf_a = jnp.asarray(rng.integers(0, 2**32, BUF_WORDS, dtype=np.uint32))
+    buf_b = jnp.asarray(rng.integers(0, 2**32, BUF_WORDS, dtype=np.uint32))
+
+    for banks in BANK_COUNTS:
+        geo = BankGeometry(banks=banks, rows=2 * PAIRS, cols=COLS)
+        eng = CimEngine(geo)
+        n = banks * PAIRS
+        a = jnp.asarray(rng.integers(0, 2, (n, COLS)))
+        b = jnp.asarray(rng.integers(0, 2, (n, COLS)))
+
+        out = eng.simulate(a, b, "xor")          # compile + correctness
+        assert np.array_equal(np.asarray(out),
+                              np.asarray(a ^ b).astype(bool))
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(eng.simulate(a, b, "xor"))
+        us = (time.perf_counter() - t0) * 1e6 / reps
+        rows.append((f"circuit_B{banks}", us,
+                     f"{n}x{COLS}b pairs in {PAIRS} cycles = "
+                     f"{geo.bits_per_cycle} ops/cycle"))
+
+        eng2 = CimEngine(geo)
+        enc = eng2.xor(buf_a, buf_b)
+        jax.block_until_ready(enc)
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng2.xor(buf_a, buf_b))
+        us = (time.perf_counter() - t0) * 1e6
+        cyc = eng2.cycles_for(BUF_WORDS * 32)
+        rows.append((f"engine_B{banks}", us,
+                     f"{BUF_WORDS * 32} bit-ops in {cyc} modeled cycles "
+                     f"({eng2.stats.ops_per_cycle:.0f} ops/cycle)"))
+
+    # linearity check across the sweep: ops/cycle ratio == bank ratio
+    base = BANK_COUNTS[0]
+    geo0 = BankGeometry(banks=base, rows=2 * PAIRS, cols=COLS)
+    for banks in BANK_COUNTS[1:]:
+        geo = BankGeometry(banks=banks, rows=2 * PAIRS, cols=COLS)
+        rows.append((f"scaling_B{base}->B{banks}", 0.0,
+                     f"ops/cycle x{geo.bits_per_cycle // geo0.bits_per_cycle} "
+                     f"(ideal x{banks // base})"))
+    return rows

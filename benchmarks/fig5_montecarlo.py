@@ -38,6 +38,17 @@ def run() -> list[tuple]:
     rows.append(("fig5_margins", 0.0,
                  f"min_lo={m[:,0].min()*1e6:.2f}uA min_hi={m[:,1].min()*1e6:.2f}uA"))
 
+    # beyond-paper: the same MC vmapped over a bank stack (DESIGN.md §10) —
+    # every bank is an independent device/Vt world; errors aggregate over all.
+    t0 = time.perf_counter()
+    bres = montecarlo.run(jax.random.PRNGKey(1), samples=1250, rows=3, banks=4)
+    jax.block_until_ready(bres.i_sl)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig5_banked_mc", dt,
+                 f"worlds={bres.i_sl.shape[0]}x{bres.i_sl.shape[1]}banks "
+                 f"max_err={float(bres.error_rate.max()):.5f} "
+                 f"min_margin={float(bres.margins.min())*1e6:.2f}uA"))
+
     t0 = time.perf_counter()
     ratios = jnp.array([1e4, 3e4, 1e5, 3e5, 3e9 / 1e4])
     mr_lrs = np.asarray(montecarlo.max_rows_sweep(ratios, vary="lrs"))

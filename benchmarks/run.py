@@ -8,8 +8,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig4_functional, fig5_montecarlo, fig6_xnornet,
-                        roofline_bench, table1_latency, verify_throughput)
+from benchmarks import (bank_scaling, fig4_functional, fig5_montecarlo,
+                        fig6_xnornet, roofline_bench, table1_latency,
+                        verify_throughput)
 
 SUITES = [
     ("fig4", fig4_functional),
@@ -17,6 +18,7 @@ SUITES = [
     ("table1", table1_latency),
     ("fig6", fig6_xnornet),
     ("verify", verify_throughput),
+    ("banks", bank_scaling),
     ("roofline", roofline_bench),
 ]
 

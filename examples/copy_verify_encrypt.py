@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import cim, verify
+from repro.core.engine import BankGeometry, CimEngine
 import jax.numpy as jnp
 
 # --- the circuit-level story: row copy + in-memory XOR verification ----------
@@ -28,6 +29,17 @@ arr = cim.write(arr, 1, 3, int(1 - src_row[3]))        # corrupt one bit
 diff = np.asarray(cim.compute(arr, 0, 1, "xor"))
 print("after 1-bit corruption:", diff.astype(int), "-> flagged:",
       bool(diff.any()))
+
+# --- the banked story: many copies verified per sense cycle (DESIGN.md §10) --
+rng0 = np.random.default_rng(7)
+engine = CimEngine(BankGeometry(banks=4, rows=8, cols=32))
+src = rng0.integers(0, 2, (12, 32))                    # 12 copied rows
+dst = src.copy()
+dst[5, 20] ^= 1                                        # corrupt copy #5
+diff = np.asarray(engine.simulate(jnp.asarray(src), jnp.asarray(dst), "xor"))
+bad = np.flatnonzero(diff.any(axis=1))
+print(f"banked copy-verify: {len(src)} pairs over {engine.geometry.banks} "
+      f"banks in {engine.stats.cycles} sense cycles -> corrupt rows {bad}")
 
 # --- the framework-level story: checkpoint shards -----------------------------
 rng = np.random.default_rng(0)

@@ -46,8 +46,14 @@ GM_OVER_I = 2.0
 
 
 class ArrayState(NamedTuple):
-    """A CiM array: per-cell resistance + optional per-cell leak currents."""
-    r: jnp.ndarray           # (rows, cols) resistance, Ohm
+    """One CiM array — or a whole bank stack of them.
+
+    ``r`` is ``(rows, cols)`` for a single array or ``(..., rows, cols)``
+    for a stack of independent banks sharing geometry (DESIGN.md §10): every
+    function below treats the trailing two axes as (rows, cols) and
+    broadcasts over any leading bank axes.
+    """
+    r: jnp.ndarray           # (..., rows, cols) resistance, Ohm
     leak_lrs: jnp.ndarray    # scalar or broadcastable leakage constants
     leak_hrs: jnp.ndarray
 
@@ -55,7 +61,10 @@ class ArrayState(NamedTuple):
 def make_array(bits: jnp.ndarray, lrs: float | jnp.ndarray = LRS,
                hrs: float | jnp.ndarray = HRS,
                leak_lrs=LEAK_LRS, leak_hrs=LEAK_HRS) -> ArrayState:
-    """Program an array from a (rows, cols) 0/1 matrix ('1' -> LRS)."""
+    """Program an array from a (..., rows, cols) 0/1 matrix ('1' -> LRS).
+
+    Leading axes are independent banks programmed in one shot.
+    """
     r = jnp.where(bits.astype(bool), lrs, hrs)
     return ArrayState(r, jnp.asarray(leak_lrs), jnp.asarray(leak_hrs))
 
@@ -66,9 +75,25 @@ def write(state: ArrayState, row: int, col: int, bit) -> ArrayState:
     (paper Fig. 3: +0.4 V BL writes '1' (-> LRS), -0.15 V writes '0' (-> HRS);
     half-accessed cells see sub-threshold bias and keep their state — here
     that invariant holds by construction since only (row, col) is updated.)
+
+    On a banked state the same (row, col) cell is written in every bank;
+    ``bit`` may be bank-shaped to program different values per bank.
     """
     new_r = jnp.where(jnp.asarray(bit, bool), LRS, HRS)
-    return state._replace(r=state.r.at[row, col].set(new_r))
+    return state._replace(r=state.r.at[..., row, col].set(new_r))
+
+
+def _wl_one_hot(num_rows: int, *row_indices) -> jnp.ndarray:
+    """OR of one-hot row selects: (..., P, rows) for (..., P) indices.
+
+    Scalar indices produce the classic (rows,) mask; array indices vectorize
+    the word-line decoder over row-pairs (and optionally banks).
+    """
+    rows = jnp.arange(num_rows)
+    wl = jnp.zeros((), bool)
+    for idx in row_indices:
+        wl = wl | (rows == jnp.asarray(idx)[..., None])
+    return wl
 
 
 def sl_currents(state: ArrayState, wl_mask: jnp.ndarray) -> jnp.ndarray:
@@ -78,22 +103,37 @@ def sl_currents(state: ArrayState, wl_mask: jnp.ndarray) -> jnp.ndarray:
     their state-dependent constant.  This is the analog summation the paper
     exploits — on the SL, currents add, so the column-wise result is
     data-parallel across the whole row width (the paper's bulk parallelism).
+
+    ``wl_mask`` is (..., rows) and ``state.r`` is (..., rows, cols); both
+    broadcast, so one call senses every bank (and every vectorized row-pair)
+    at once — the array-level parallelism of DESIGN.md §10.
     """
-    accessed = wl_mask.astype(bool)[:, None]
+    accessed = wl_mask.astype(bool)[..., :, None]
     i_on = V_BL / (state.r + R_ACC)
     is_lrs = state.r < (LRS + HRS) / 2
     i_leak = jnp.where(is_lrs, state.leak_lrs, state.leak_hrs)
-    return jnp.sum(jnp.where(accessed, i_on, i_leak), axis=0)
+    return jnp.sum(jnp.where(accessed, i_on, i_leak), axis=-2)
 
 
-def compute(state: ArrayState, row_a: int, row_b: int, op: str = "xor",
+def compute(state: ArrayState, row_a, row_b, op: str = "xor",
             offset1=0.0, offset2=0.0) -> jnp.ndarray:
     """Single-cycle in-memory Boolean op between two rows (all columns).
 
     Asserts both word lines, senses each column's SL current through the
     dual-reference datapath of Fig. 2(c).  One sense cycle, row-wide.
+
+    ``row_a``/``row_b`` may be ints (one row-pair, the paper's primitive) or
+    integer arrays of shape (P,) / (..., P) naming P row-pairs per bank; the
+    result gains a matching (..., P) prefix before the column axis.  On a
+    banked (..., rows, cols) state the op runs in every bank, so one traced
+    call computes banks x pairs x cols bit-ops (DESIGN.md §10).
     """
-    wl = jnp.zeros(state.r.shape[0], bool).at[row_a].set(True).at[row_b].set(True)
+    ra, rb = jnp.asarray(row_a), jnp.asarray(row_b)
+    wl = _wl_one_hot(state.r.shape[-2], ra, rb)
+    if ra.ndim or rb.ndim:
+        # insert the pair axis before (rows, cols) so wl (..., P, rows)
+        # broadcasts against r (..., 1, rows, cols)
+        state = state._replace(r=state.r[..., None, :, :])
     i_sl = sl_currents(state, wl)
     spec = logic.op_table()[op]
     return logic.sense_datapath(i_sl, spec, offset1, offset2)
@@ -105,8 +145,12 @@ def compute(state: ArrayState, row_a: int, row_b: int, op: str = "xor",
 READ_REF = 4e-6
 
 
-def read(state: ArrayState, row: int, offset=0.0) -> jnp.ndarray:
-    wl = jnp.zeros(state.r.shape[0], bool).at[row].set(True)
+def read(state: ArrayState, row, offset=0.0) -> jnp.ndarray:
+    """Memory-mode read of one row — or (P,)/(..., P) rows, vectorized."""
+    rv = jnp.asarray(row)
+    wl = _wl_one_hot(state.r.shape[-2], rv)
+    if rv.ndim:
+        state = state._replace(r=state.r[..., None, :, :])
     i_sl = sl_currents(state, wl)
     return i_sl > (READ_REF + offset)
 

@@ -17,8 +17,6 @@ import hashlib
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
-
 
 def derive_key(root_key: bytes | str, leaf_path: str):
     """(key0, key1, counter_base) uint32 triple from root key + leaf path."""
@@ -66,8 +64,17 @@ def decrypt_np(buf: np.ndarray, root_key: bytes | str, leaf_path: str,
 
 
 def encrypt_device(buf: jnp.ndarray, root_key: bytes | str, leaf_path: str,
-                   impl: str = "auto") -> jnp.ndarray:
-    """Device-side cipher over a uint32 buffer (jit-able)."""
+                   impl: str = "auto", engine=None) -> jnp.ndarray:
+    """Device-side cipher over a uint32 buffer (jit-able).
+
+    Routed through the banked :class:`repro.core.engine.CimEngine` — pass
+    ``engine=`` to cycle-account the cipher against a shared bank schedule
+    (DESIGN.md §10), in which case the engine's own ``impl`` wins and the
+    ``impl`` argument is ignored; otherwise a throwaway default-geometry
+    engine is built from ``impl``.
+    """
+    from repro.core.engine import CimEngine
     k0, k1, ctr = derive_key(root_key, leaf_path)
     key = jnp.array([k0, k1], dtype=jnp.uint32)
-    return ops.stream_cipher(buf, key, counter=int(ctr), impl=impl)
+    eng = engine if engine is not None else CimEngine(impl=impl)
+    return eng.stream_cipher(buf, key, counter=int(ctr))

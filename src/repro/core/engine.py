@@ -1,0 +1,158 @@
+"""Banked batched CiM engine — the scheduler over the single-cycle primitive.
+
+The paper's array computes ONE row-pair XOR/XNOR per sense cycle, but a
+deployment tiles many independent arrays (banks) behind one controller:
+every cycle, every bank senses one row-pair across its full row width, so
+throughput is ``banks * cols`` bit-ops/cycle (DESIGN.md §10; the same
+array-level parallelism X-SRAM and the in-DRAM X(N)OR designs lean on).
+
+:class:`CimEngine` is that controller at framework scale.  It exposes two
+coupled views of the same machine:
+
+* **engine path** — bit-packed uint32 buffers (:mod:`repro.core.bitpack`
+  layout) dispatched through the three-path kernel layer
+  (:func:`repro.kernels.ops.bulk_op` / ``digest`` / ``stream_cipher``),
+  with *cycle accounting* under the bank model: production throughput.
+* **circuit path** (:meth:`simulate`) — the same schedule mapped onto a
+  banked :class:`repro.core.cim.ArrayState` and computed through the analog
+  SL-current model, one traced call for banks x pairs x cols bit-ops:
+  the faithful cross-check the tests pin the engine against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import bitpack, cim
+from repro.kernels import ops
+
+
+class BankGeometry(NamedTuple):
+    """Geometry of the bank stack: ``banks`` arrays of rows x cols cells."""
+    banks: int = 8
+    rows: int = 512       # paper §V: 512 rows supported at nominal HRS/LRS
+    cols: int = 4096      # bits per row (= 128 uint32 words)
+
+    @property
+    def words_per_row(self) -> int:
+        return bitpack.packed_width(self.cols)
+
+    @property
+    def bits_per_cycle(self) -> int:
+        """One row-wide op per bank per cycle."""
+        return self.banks * self.cols
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cycle/op counters accumulated across engine calls."""
+    cycles: int = 0
+    bit_ops: int = 0
+    calls: int = 0
+
+    def account(self, cycles: int, bit_ops: int) -> None:
+        self.cycles += cycles
+        self.bit_ops += bit_ops
+        self.calls += 1
+
+    @property
+    def ops_per_cycle(self) -> float:
+        return self.bit_ops / self.cycles if self.cycles else 0.0
+
+
+class CimEngine:
+    """Schedules arbitrarily large packed buffers onto the bank stack.
+
+    ``impl`` selects the kernel path (ref/interpret/pallas/auto) for every
+    dispatched op, same semantics as :mod:`repro.kernels.ops`.
+    """
+
+    def __init__(self, geometry: BankGeometry = BankGeometry(),
+                 impl: str = "auto"):
+        self.geometry = geometry
+        self.impl = impl
+        self.stats = EngineStats()
+
+    # -- schedule model ------------------------------------------------------
+
+    def cycles_for(self, nbits: int) -> int:
+        """Sense cycles to stream ``nbits`` bit-ops through the bank stack."""
+        return -(-nbits // self.geometry.bits_per_cycle)
+
+    def _account(self, *buffers: jnp.ndarray) -> None:
+        nbits = max(b.size * b.dtype.itemsize * 8 for b in buffers)
+        self.stats.account(self.cycles_for(nbits), nbits)
+
+    # -- engine path: packed uint32 buffers ----------------------------------
+
+    def xor(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Bulk XOR of two same-shape uint32 buffers (one pass)."""
+        out = ops.bulk_op(a, b, "xor", impl=self.impl)
+        self._account(a)  # after dispatch: failed calls don't skew stats
+        return out
+
+    def xnor(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Bulk XNOR — complementary rail, same cycle count."""
+        out = ops.bulk_op(a, b, "xnor", impl=self.impl)
+        self._account(a)
+        return out
+
+    def digest(self, buf: jnp.ndarray, digest_width: int = 128) -> jnp.ndarray:
+        """XOR-parity digest routed through the bank stack.
+
+        Folding is XOR of successive row-groups, so the cycle model is the
+        same one-op-per-bit stream as :meth:`xor`.
+        """
+        out = ops.digest(buf, digest_width, impl=self.impl)
+        self._account(buf)
+        return out
+
+    def verify_copy(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Paper Fig. 1(a): XOR source against copy, all-zero means intact."""
+        return jnp.logical_not(jnp.any(self.xor(a, b)))
+
+    def stream_cipher(self, buf: jnp.ndarray, key: jnp.ndarray,
+                      counter: int = 0) -> jnp.ndarray:
+        """Paper Fig. 1(b): counter-mode XOR pad over the bank stack."""
+        out = ops.stream_cipher(buf, key, counter=counter, impl=self.impl)
+        self._account(buf)
+        return out
+
+    # -- circuit path: the analog model, banked ------------------------------
+
+    def simulate(self, bits_a: jnp.ndarray, bits_b: jnp.ndarray,
+                 op: str = "xor") -> jnp.ndarray:
+        """Run N row-pairs through the *analog* banked array model.
+
+        ``bits_a``/``bits_b``: (N, C) 0/1 operand rows, C <= geometry.cols.
+        Pair ``j`` is programmed into bank ``j // P`` (P = ceil(N/banks))
+        as rows (2p, 2p+1); one banked :func:`repro.core.cim.compute` call
+        then senses all banks x P pairs — P sense cycles on real hardware,
+        one traced call here.  Returns (N, C) bool.
+        """
+        bits_a, bits_b = jnp.asarray(bits_a), jnp.asarray(bits_b)
+        n, c = bits_a.shape
+        if bits_b.shape != (n, c):
+            raise ValueError(f"operand shapes differ: {bits_a.shape} vs "
+                             f"{bits_b.shape}")
+        if c > self.geometry.cols:
+            raise ValueError(f"{c} cols exceed bank width {self.geometry.cols}")
+        banks = self.geometry.banks
+        pairs = -(-n // banks)
+        if 2 * pairs > self.geometry.rows:
+            raise ValueError(f"{n} pairs need {2 * pairs} rows/bank, "
+                             f"bank has {self.geometry.rows}")
+        pad = banks * pairs - n
+        bits_a = jnp.pad(bits_a, ((0, pad), (0, 0)))
+        bits_b = jnp.pad(bits_b, ((0, pad), (0, 0)))
+        # (banks, pairs, 2, C) -> interleave operand rows -> (banks, 2P, C)
+        stacked = jnp.stack([bits_a, bits_b], axis=1)      # (B*P, 2, C)
+        cells = stacked.reshape(banks, pairs, 2, c).reshape(banks, 2 * pairs, c)
+        state = cim.make_array(cells)
+        row_a = 2 * jnp.arange(pairs)
+        out = cim.compute(state, row_a, row_a + 1, op)     # (banks, P, C)
+        self.stats.account(pairs, n * c)
+        return out.reshape(banks * pairs, c)[:n]

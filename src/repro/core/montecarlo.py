@@ -25,13 +25,16 @@ SIGMA_VT = 25e-3          # V
 
 
 class MCResult(NamedTuple):
-    i_sl: jnp.ndarray        # (samples, 3) currents for s = 0, 1, 2
-    v_cell: jnp.ndarray      # (samples, 3) CSA n_CELL voltages
-    v_ref: jnp.ndarray       # (samples, 2) n_REF voltages (REF1, REF2)
-    xor_out: jnp.ndarray     # (samples, 3) bool datapath outputs (XOR)
-    xnor_out: jnp.ndarray    # (samples, 3)
-    error_rate: jnp.ndarray  # (3,) fraction of samples mis-sensed (XOR)
-    margins: jnp.ndarray     # (samples, 2) (I01-REF1eff, REF2eff-I01)
+    """Leading axes are (samples,) for ``banks=1`` (the paper's setup) or
+    (samples, banks) when the MC is vmapped over a bank stack — every bank
+    is an independent array with its own device/Vt world (DESIGN.md §10)."""
+    i_sl: jnp.ndarray        # (samples[, banks], 3) currents for s = 0, 1, 2
+    v_cell: jnp.ndarray      # (samples[, banks], 3) CSA n_CELL voltages
+    v_ref: jnp.ndarray       # (samples[, banks], 2) n_REF voltages (REF1, REF2)
+    xor_out: jnp.ndarray     # (samples[, banks], 3) bool datapath outputs (XOR)
+    xnor_out: jnp.ndarray    # (samples[, banks], 3)
+    error_rate: jnp.ndarray  # (3,) fraction mis-sensed (XOR), over all worlds
+    margins: jnp.ndarray     # (samples[, banks], 2) (I01-REF1eff, REF2eff-I01)
 
 
 def _one_sample(key, rows: int, op_specs) -> tuple:
@@ -71,14 +74,28 @@ def _one_sample(key, rows: int, op_specs) -> tuple:
     return i_s, v_cell, v_ref, xor_o, xnor_o, margins
 
 
-def run(key: jax.Array, samples: int = 5000, rows: int = 3) -> MCResult:
-    """The paper's 5000-point MC (vmapped, one jit)."""
+def run(key: jax.Array, samples: int = 5000, rows: int = 3,
+        banks: int = 1) -> MCResult:
+    """The paper's 5000-point MC (vmapped, one jit).
+
+    ``banks > 1`` nests a second vmap over independent per-bank worlds —
+    the variation picture for the banked engine, where each bank has its
+    own device lot and sense amps.  Result axes gain a bank dimension
+    (squeezed away for ``banks=1`` so the paper's single-array shapes are
+    unchanged); ``error_rate`` aggregates over samples *and* banks.
+    """
     specs = (logic.op_table()["xor"], logic.op_table()["xnor"])
-    keys = jax.random.split(key, samples)
+    keys = jax.random.split(key, samples * banks)
+    keys = keys.reshape(samples, banks, *keys.shape[1:])  # typed keys: (S, B)
+    sample_fn = lambda k: _one_sample(k, rows, specs)
     i_s, v_cell, v_ref, xor_o, xnor_o, margins = jax.vmap(
-        lambda k: _one_sample(k, rows, specs))(keys)
+        jax.vmap(sample_fn))(keys)
     want_xor = jnp.array([False, True, False])
-    err = jnp.mean(xor_o != want_xor[None, :], axis=0)
+    err = jnp.mean(xor_o != want_xor[None, None, :], axis=(0, 1))
+    res = (i_s, v_cell, v_ref, xor_o, xnor_o, margins)
+    if banks == 1:
+        res = tuple(x[:, 0] for x in res)
+    i_s, v_cell, v_ref, xor_o, xnor_o, margins = res
     return MCResult(i_s, v_cell, v_ref, xor_o, xnor_o, err, margins)
 
 

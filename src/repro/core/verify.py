@@ -11,6 +11,11 @@ verifies the copy.  Our framework-scale equivalents:
 * :func:`np_digest` — numpy twin used by the checkpoint layer on the host
   I/O path (bit-identical to the jax fold for uint32 streams).
 
+Device-side digests route through the banked :class:`repro.core.engine
+.CimEngine` (cycle-accounted bank schedule, DESIGN.md §10); pass ``engine=``
+to share one engine's stats across calls, or ``impl=`` to hit the kernel
+layer directly with a throwaway default engine.
+
 Any single-bit corruption flips exactly one digest bit (XOR linearity), so
 digest equality is a true parity check, not a heuristic hash.
 """
@@ -21,19 +26,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core import engine as _engine
 
 DIGEST_WIDTH = 128  # uint32 words = 512 bytes
 
 
-def tree_digest(tree, impl: str = "auto"):
+def tree_digest(tree, impl: str = "auto",
+                engine: _engine.CimEngine | None = None):
     """Pytree -> same-structure pytree of (DIGEST_WIDTH,) uint32 digests."""
-    return jax.tree.map(lambda x: ops.digest(x, DIGEST_WIDTH, impl=impl), tree)
+    eng = engine if engine is not None else _engine.CimEngine(impl=impl)
+    return jax.tree.map(lambda x: eng.digest(x, DIGEST_WIDTH), tree)
 
 
-def verify_trees(a, b, impl: str = "auto"):
+def verify_trees(a, b, impl: str = "auto",
+                 engine: _engine.CimEngine | None = None):
     """Returns (all_ok: bool array, per-leaf ok pytree) comparing digests."""
-    da, db = tree_digest(a, impl), tree_digest(b, impl)
+    da = tree_digest(a, impl, engine=engine)
+    db = tree_digest(b, impl, engine=engine)
     leaf_ok = jax.tree.map(lambda x, y: jnp.all(x == y), da, db)
     return jnp.all(jnp.stack(jax.tree.leaves(leaf_ok))), leaf_ok
 

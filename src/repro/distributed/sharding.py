@@ -19,6 +19,25 @@ from jax.sharding import PartitionSpec as P
 DEFAULT_RULES = {"fsdp": "data", "tp": "model", "ep": "model"}
 
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes: set[str]):
+    """Version-portable shard_map, manual over ``manual_axes`` only.
+
+    Newer jax spells this ``jax.shard_map(..., axis_names=manual_axes,
+    check_vma=False)``; jax 0.4.x spells it ``auto = mesh axes - manual``.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 axis_names=set(manual_axes), check_vma=False)
+        except TypeError:  # mid-window jax: top-level symbol, old kwargs
+            pass
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False,
+                      auto=frozenset(mesh.axis_names) - set(manual_axes))
+
+
 def batch_axes(mesh: Mesh, global_batch: int):
     """Largest prefix of (pod, data) that divides the batch."""
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]

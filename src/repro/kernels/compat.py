@@ -1,0 +1,12 @@
+"""jax-version compatibility shims for the Pallas TPU API.
+
+The TPU compiler-params container was renamed across jax releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this jax
+ships so the kernels import on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

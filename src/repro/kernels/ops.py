@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack
+from repro.kernels import bulk as _bulk
 from repro.kernels import cipher as _cipher
 from repro.kernels import pack as _pack
 from repro.kernels import parity as _parity
@@ -29,6 +30,10 @@ def _resolve(impl: str) -> str:
     impl = _FORCE or impl
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("ref", "pallas", "interpret"):
+        raise ValueError(
+            f"unknown kernel impl {impl!r} (from REPRO_KERNEL_IMPL or impl=);"
+            " expected auto|ref|interpret|pallas")
     return impl
 
 
@@ -111,6 +116,41 @@ def digest(buf: jnp.ndarray, digest_width: int = 128, impl: str = "auto",
     words = _pad_rows(words, br)
     return _parity.parity_digest(words, digest_width=digest_width, br=br,
                                  interpret=(impl == "interpret"))
+
+
+def bulk_op(a: jnp.ndarray, b: jnp.ndarray, op: str = "xor",
+            impl: str = "auto", br: int = 512) -> jnp.ndarray:
+    """Bulk bitwise XOR/XNOR of two same-shape uint32 buffers.
+
+    The digital form of the banked engine's compute cycle (DESIGN.md §10):
+    every uint32 lane carries 32 row-columns, so one call is the bulk
+    row-wide Boolean op the paper computes per sense cycle, tiled over the
+    whole buffer.  Restricted to uint32 like :func:`stream_cipher` so results
+    are bit-exact across all three impl paths.
+    """
+    if op not in ("xor", "xnor"):
+        raise ValueError(f"bulk_op supports xor/xnor, got {op!r}")
+    if a.dtype != jnp.uint32 or b.dtype != jnp.uint32:
+        raise TypeError(f"bulk_op needs uint32, got {a.dtype}/{b.dtype}")
+    if a.shape != b.shape:
+        raise ValueError(f"operand shapes differ: {a.shape} vs {b.shape}")
+    invert = op == "xnor"
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.bulk_xor(a, b, invert=invert)
+    words_a, words_b = a.reshape(-1), b.reshape(-1)
+    n = words_a.shape[0]
+    d = 128
+    pad = (-n) % d
+    a2 = jnp.pad(words_a, (0, pad)).reshape(-1, d)
+    b2 = jnp.pad(words_b, (0, pad)).reshape(-1, d)
+    # pad rows rather than shrink the tile: pad output is sliced off below
+    # (no cross-tile dependency, unlike digest's fold).
+    br = min(br, a2.shape[0])
+    a2, b2 = _pad_rows(a2, br), _pad_rows(b2, br)
+    out = _bulk.bulk_xor(a2, b2, invert=invert, br=br,
+                         interpret=(impl == "interpret"))
+    return out.reshape(-1)[:n].reshape(a.shape)
 
 
 def stream_cipher(buf: jnp.ndarray, key: jnp.ndarray, counter: int = 0,

@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(w_ref, d_ref):
@@ -49,7 +50,7 @@ def parity_digest(words: jnp.ndarray, *, digest_width: int = 128,
         in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, d), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=compat.CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(words)
     return out[0]

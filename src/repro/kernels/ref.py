@@ -55,6 +55,16 @@ def pack(x: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# Bulk XOR/XNOR (the banked engine's row-pair cycle, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def bulk_xor(a: jnp.ndarray, b: jnp.ndarray, invert: bool = False) -> jnp.ndarray:
+    """Elementwise XOR (XNOR with ``invert``) of two uint32 buffers."""
+    x = jnp.bitwise_xor(a, b)
+    return jnp.bitwise_not(x) if invert else x
+
+
+# ---------------------------------------------------------------------------
 # XOR parity digest (bulk copy-verification)
 # ---------------------------------------------------------------------------
 

@@ -106,6 +106,8 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
 def roofline(compiled, model_flops: float | None = None) -> dict:
     """Derive the three terms + bottleneck from a compiled artifact."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     ma = compiled.memory_analysis()
     hlo_flops = float(cost.get("flops", 0.0))
     hlo_bytes = float(cost.get("bytes accessed", 0.0))

@@ -134,9 +134,9 @@ def train_step(cfg, state: TrainState, batch: dict, step: jnp.ndarray, *,
         out_specs = (P(),
                      {"ce": P(), "aux": P(), "tokens": P()},
                      jax.tree.map(lambda _: P(), state.params))
-        loss, metrics, grads = jax.shard_map(
-            podwise, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names={"pod"}, check_vma=False,
+        from repro.distributed import sharding as _sharding
+        loss, metrics, grads = _sharding.shard_map(
+            podwise, mesh, in_specs, out_specs, manual_axes={"pod"},
         )(state.params, batch)
     else:
         loss, metrics, grads = _grads(cfg, state.params, batch, q_chunk,

@@ -52,6 +52,29 @@ def test_write_then_compute():
     assert np.array_equal(out, [False, True, True, False])
 
 
+def test_banked_array_compute_and_read():
+    """A (B, rows, cols) state computes every bank in one call (DESIGN.md
+    §10); scalar row indices keep the classic per-array semantics."""
+    rng = np.random.default_rng(3)
+    bits = rng.integers(0, 2, (4, 3, 8))
+    st = cim.make_array(jnp.asarray(bits))
+    out = np.asarray(cim.compute(st, 0, 1, "xor"))
+    assert np.array_equal(out, (bits[:, 0] ^ bits[:, 1]).astype(bool))
+    assert np.array_equal(np.asarray(cim.read(st, 2)),
+                          bits[:, 2].astype(bool))
+
+
+def test_pair_vectorized_compute_single_array():
+    """(P,) row indices compute P row-pairs of one array in one call."""
+    rng = np.random.default_rng(4)
+    bits = rng.integers(0, 2, (6, 10))
+    st = cim.make_array(jnp.asarray(bits))
+    ra, rb = jnp.array([0, 2, 4]), jnp.array([1, 3, 5])
+    out = np.asarray(cim.compute(st, ra, rb, "xnor"))
+    want = ~(bits[[0, 2, 4]] ^ bits[[1, 3, 5]]).astype(bool)
+    assert np.array_equal(out, want)
+
+
 def test_montecarlo_5000_points_no_errors():
     """Paper §V: levels stay separable under LRS/HRS (3sig=10%) + Vt (25 mV)."""
     res = montecarlo.run(jax.random.PRNGKey(0), samples=5000, rows=3)

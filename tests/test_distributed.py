@@ -79,15 +79,18 @@ def test_onebit_pod_compression_lowers_with_allgather():
         import jax, jax.numpy as jnp, numpy as np, re
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch import mesh as mesh_mod
+        from repro.distributed import sharding
         from repro.train.train_step import _onebit_pod_allreduce
 
         mesh = mesh_mod.make_smoke_mesh(8)   # (pod, data, model) = (2,2,2)
         grads = jnp.linspace(-1.0, 1.0, 2 * 64).reshape(2, 64)
 
-        sharded = jax.shard_map(
-            _onebit_pod_allreduce, mesh=mesh,
+        # fully manual: the isolated collective only uses "pod", and partial
+        # manual subgroups crash the old XLA:CPU SPMD partitioner.
+        sharded = sharding.shard_map(
+            _onebit_pod_allreduce, mesh,
             in_specs=P("pod", None), out_specs=P("pod", None),
-            axis_names={"pod"}, check_vma=False)
+            manual_axes=set(mesh.axis_names))
         with mesh:
             compiled = jax.jit(sharded).lower(grads).compile()
         txt = compiled.as_text()

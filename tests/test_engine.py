@@ -1,0 +1,174 @@
+"""Banked engine tests (DESIGN.md §10): banked/vectorized `cim.compute`
+against a Python loop of single-array calls, CimEngine round-trips against
+the existing single-array paths, and the cycle-accounting model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim, encrypt, verify
+from repro.core.engine import BankGeometry, CimEngine
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# banked compute == loop of per-array compute, bit-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("banks,rows,cols,pairs,seed", [
+    (1, 4, 8, 1, 0), (3, 8, 16, 4, 1), (8, 6, 32, 2, 2), (13, 10, 5, 5, 3),
+])
+@pytest.mark.parametrize("op", ["xor", "xnor"])
+def test_banked_compute_matches_single_array_loop(banks, rows, cols, pairs,
+                                                  seed, op):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (banks, rows, cols))
+    ra = rng.integers(0, rows, (banks, pairs))
+    rb = (ra + 1 + rng.integers(0, rows - 1, (banks, pairs))) % rows
+    state = cim.make_array(jnp.asarray(bits))
+    out = np.asarray(cim.compute(state, jnp.asarray(ra), jnp.asarray(rb), op))
+    assert out.shape == (banks, pairs, cols)
+    for b in range(banks):
+        single = cim.make_array(jnp.asarray(bits[b]))
+        for p in range(pairs):
+            want = cim.compute(single, int(ra[b, p]), int(rb[b, p]), op)
+            assert np.array_equal(out[b, p], np.asarray(want)), (b, p)
+
+
+def test_banked_compute_matches_vmap():
+    bits = RNG.integers(0, 2, (6, 4, 12))
+    state = cim.make_array(jnp.asarray(bits))
+    banked = cim.compute(state, 0, 1, "xor")
+    vmapped = jax.vmap(lambda r: cim.compute(cim.ArrayState(
+        r, state.leak_lrs, state.leak_hrs), 0, 1, "xor"))(state.r)
+    assert np.array_equal(np.asarray(banked), np.asarray(vmapped))
+
+
+def test_banked_read_and_write():
+    bits = RNG.integers(0, 2, (4, 6, 9))
+    state = cim.make_array(jnp.asarray(bits))
+    got = np.asarray(cim.read(state, jnp.arange(6)))
+    assert np.array_equal(got, bits.astype(bool))
+    per_bank = RNG.integers(0, 2, (4,))
+    state = cim.write(state, 2, 3, jnp.asarray(per_bank))
+    assert np.array_equal(np.asarray(cim.read(state, 2))[:, 3],
+                          per_bank.astype(bool))
+
+
+def test_shared_pair_indices_broadcast_over_banks():
+    bits = RNG.integers(0, 2, (5, 8, 7))
+    state = cim.make_array(jnp.asarray(bits))
+    ra, rb = jnp.array([0, 2, 4]), jnp.array([1, 3, 5])
+    out = np.asarray(cim.compute(state, ra, rb, "xor"))
+    assert out.shape == (5, 3, 7)
+    want = bits[:, [0, 2, 4]] ^ bits[:, [1, 3, 5]]
+    assert np.array_equal(out, want.astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# CimEngine.simulate: analog banked path == digital truth
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 3, 7, 16, 31])
+def test_simulate_matches_digital_xor(n):
+    eng = CimEngine(BankGeometry(banks=4, rows=16, cols=24), impl="ref")
+    a = RNG.integers(0, 2, (n, 24))
+    b = RNG.integers(0, 2, (n, 24))
+    out = np.asarray(eng.simulate(jnp.asarray(a), jnp.asarray(b), "xor"))
+    assert np.array_equal(out, (a ^ b).astype(bool))
+    outn = np.asarray(eng.simulate(jnp.asarray(a), jnp.asarray(b), "xnor"))
+    assert np.array_equal(outn, ~(a ^ b).astype(bool))
+
+
+def test_simulate_rejects_overflow():
+    eng = CimEngine(BankGeometry(banks=2, rows=4, cols=8))
+    ok = jnp.zeros((4, 8))        # 2 pairs/bank = 4 rows: fits exactly
+    eng.simulate(ok, ok)
+    with pytest.raises(ValueError):
+        eng.simulate(jnp.zeros((5, 8)), jnp.zeros((5, 8)))  # needs 6 rows
+    with pytest.raises(ValueError):
+        eng.simulate(jnp.zeros((1, 9)), jnp.zeros((1, 9)))  # too wide
+
+
+# ---------------------------------------------------------------------------
+# CimEngine round-trips bit-exactly against the single-array paths
+# ---------------------------------------------------------------------------
+
+def test_engine_digest_matches_ops_digest():
+    eng = CimEngine(impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 5000, dtype=np.uint32))
+    assert np.array_equal(np.asarray(eng.digest(buf)),
+                          np.asarray(ops.digest(buf, impl="ref")))
+
+
+def test_engine_cipher_matches_ops_and_involutes():
+    eng = CimEngine(impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 4096, dtype=np.uint32))
+    key = jnp.array([11, 42], dtype=jnp.uint32)
+    enc = eng.stream_cipher(buf, key, counter=9)
+    assert np.array_equal(
+        np.asarray(enc),
+        np.asarray(ops.stream_cipher(buf, key, counter=9, impl="ref")))
+    assert np.array_equal(np.asarray(eng.stream_cipher(enc, key, counter=9)),
+                          np.asarray(buf))
+
+
+def test_tree_digest_through_engine_matches_direct_path():
+    tree = {"w": jnp.asarray(RNG.standard_normal((64, 32)), jnp.float32),
+            "b": jnp.asarray(RNG.standard_normal((128,)), jnp.float32)}
+    eng = CimEngine(impl="ref")
+    via_engine = verify.tree_digest(tree, engine=eng)
+    direct = {k: ops.digest(v, verify.DIGEST_WIDTH, impl="ref")
+              for k, v in tree.items()}
+    for k in tree:
+        assert np.array_equal(np.asarray(via_engine[k]),
+                              np.asarray(direct[k])), k
+    ok, _ = verify.verify_trees(tree, tree, engine=eng)
+    assert bool(ok)
+
+
+def test_encrypt_device_through_engine_round_trips():
+    eng = CimEngine(impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 1024, dtype=np.uint32))
+    enc = encrypt.encrypt_device(buf, "root", "leaf", engine=eng)
+    assert not np.array_equal(np.asarray(enc), np.asarray(buf))
+    assert np.array_equal(
+        np.asarray(encrypt.encrypt_device(enc, "root", "leaf", engine=eng)),
+        np.asarray(buf))
+    # engine path == legacy direct path, bit-exactly
+    assert np.array_equal(
+        np.asarray(enc),
+        np.asarray(encrypt.encrypt_device(buf, "root", "leaf", impl="ref")))
+
+
+def test_engine_verify_copy_flags_corruption():
+    eng = CimEngine(impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 600, dtype=np.uint32))
+    assert bool(eng.verify_copy(buf, buf))
+    assert not bool(eng.verify_copy(buf, buf.at[123].set(buf[123] ^ 1)))
+
+
+# ---------------------------------------------------------------------------
+# cycle accounting
+# ---------------------------------------------------------------------------
+
+def test_cycle_model_scales_inversely_with_banks():
+    nbits = 1 << 20
+    cycles = [CimEngine(BankGeometry(banks=b, cols=128)).cycles_for(nbits)
+              for b in (1, 8, 64)]
+    assert cycles[0] == 8 * cycles[1] == 64 * cycles[2]
+
+
+def test_engine_stats_accumulate():
+    eng = CimEngine(BankGeometry(banks=2, rows=8, cols=32), impl="ref")
+    a = jnp.asarray(RNG.integers(0, 2**32, 64, dtype=np.uint32))
+    eng.xor(a, a)
+    assert eng.stats.calls == 1
+    assert eng.stats.bit_ops == 64 * 32
+    assert eng.stats.cycles == eng.cycles_for(64 * 32)
+    eng.simulate(jnp.zeros((6, 32)), jnp.zeros((6, 32)))
+    assert eng.stats.calls == 2
+    assert eng.stats.cycles == eng.cycles_for(64 * 32) + 3  # 6 pairs / 2 banks

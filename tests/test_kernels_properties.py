@@ -1,0 +1,75 @@
+"""Hypothesis property tests on the bit-domain invariants.
+
+Kept separate from tests/test_kernels.py so the deterministic kernel suite
+still collects when hypothesis is not installed (requirements-dev.txt pins
+it for CI; the importorskip guard keeps bare environments green)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bitpack  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+RNG = np.random.default_rng(0)
+
+
+@given(st.integers(1, 8), st.integers(1, 130))
+@settings(max_examples=30, deadline=None)
+def test_pack_roundtrip_property(m, k):
+    x = RNG.standard_normal((m, k)).astype(np.float32)
+    xp = bitpack.pad_to_word(jnp.asarray(x))
+    u = bitpack.unpack_bits(bitpack.pack_bits(xp), k)
+    assert np.array_equal(np.asarray(u), np.where(x >= 0, 1.0, -1.0))
+
+
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 80))
+@settings(max_examples=20, deadline=None)
+def test_xnor_gemm_bounds_property(m, n, k):
+    """|dot| <= K and dot parity == K parity (±1 sums)."""
+    a, b = RNG.standard_normal((m, k)), RNG.standard_normal((n, k))
+    pa = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(a, jnp.float32)))
+    pb = bitpack.pack_bits(bitpack.pad_to_word(jnp.asarray(b, jnp.float32)))
+    d = np.asarray(ops.xnor_matmul(pa, pb, k, impl="ref"))
+    assert np.abs(d).max() <= k
+    assert ((d - k) % 2 == 0).all()
+
+
+@given(st.integers(0, 4999), st.integers(0, 31))
+@settings(max_examples=25, deadline=None)
+def test_digest_detects_any_single_bit_flip(pos, bit):
+    buf = jnp.asarray(RNG.integers(0, 2**32, 5000, dtype=np.uint32))
+    d0 = np.asarray(ops.digest(buf, impl="ref"))
+    flipped = buf.at[pos].set(buf[pos] ^ np.uint32(1 << bit))
+    d1 = np.asarray(ops.digest(flipped, impl="ref"))
+    # XOR linearity: exactly one digest bit differs
+    diff = d0 ^ d1
+    assert sum(int(x).bit_count() for x in diff) == 1
+
+
+@given(st.integers(1, 3000), st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cipher_involution_property(n, ctr):
+    buf = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    key = jnp.asarray(RNG.integers(0, 2**32, 2, dtype=np.uint32))
+    enc = ops.stream_cipher(buf, key, counter=ctr, impl="ref")
+    dec = ops.stream_cipher(enc, key, counter=ctr, impl="ref")
+    assert np.array_equal(np.asarray(dec), np.asarray(buf))
+
+
+@given(st.integers(1, 3000))
+@settings(max_examples=20, deadline=None)
+def test_bulk_op_involution_and_complement_property(n):
+    """xor(xor(a,b),b) == a and xnor == ~xor, any buffer length."""
+    a = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    x = ops.bulk_op(a, b, "xor", impl="ref")
+    assert np.array_equal(np.asarray(ops.bulk_op(x, b, "xor", impl="ref")),
+                          np.asarray(a))
+    xn = ops.bulk_op(a, b, "xnor", impl="ref")
+    assert np.array_equal(np.asarray(x ^ xn), np.full(n, 2**32 - 1, np.uint32))
