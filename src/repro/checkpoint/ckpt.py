@@ -13,6 +13,13 @@ Format: one ``.npz`` per host shard + a msgpack manifest
 (shapes/dtypes/digests/step).  Restore is mesh-shape-agnostic: leaves are
 addressed by tree path, so an elastic re-mesh (different device count)
 re-shards on load — index-free addressing is the elasticity story.
+
+Both applications run host-side (numpy) by default; pass ``engine=`` (a
+:class:`repro.core.engine.CimEngine` or mesh-aware ``ShardedCimEngine``)
+to ``save``/``check``/``restore`` to burn digests and the cipher on the
+device bank stack instead (DESIGN.md §11).  The two paths are bit-identical
+byte-for-byte, so device-written checkpoints restore through the host path
+and vice versa.
 """
 
 from __future__ import annotations
@@ -41,6 +48,22 @@ def _coerce(raw: np.ndarray, dtype_str: str) -> np.ndarray:
     return raw
 
 
+def _digest(arr: np.ndarray, engine) -> np.ndarray:
+    if engine is None:
+        return verify.np_digest(arr)
+    return verify.np_digest_via_device(arr, engine)
+
+
+def _decrypt(raw, root_key, leaf_path, dtype, shape, engine) -> np.ndarray:
+    if root_key is None:
+        raise ValueError("checkpoint is encrypted; pass root_key= to "
+                         "decrypt it")
+    if engine is None:
+        return encrypt.decrypt_np(raw, root_key, leaf_path, dtype, shape)
+    return encrypt.decrypt_np_via_device(raw, root_key, leaf_path, dtype,
+                                         shape, engine)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -59,22 +82,30 @@ def _path_str(p) -> str:
 
 
 def save(directory: str, step: int, tree, *, root_key: str | None = None,
-         verify_write: bool = True) -> dict:
-    """Write a checkpoint; returns the manifest (also written to disk)."""
+         verify_write: bool = True, engine=None) -> dict:
+    """Write a checkpoint; returns the manifest (also written to disk).
+
+    ``engine=`` routes digests and the cipher through the device bank stack
+    (bit-identical to the host path, but cycle-accounted and sharded when
+    the engine is a ``ShardedCimEngine``).
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     manifest: dict[str, Any] = {"step": step, "leaves": {}, "encrypted":
                                 root_key is not None}
     payload = {}
     for key, arr in flat.items():
-        digest = verify.np_digest(arr)
+        digest = _digest(arr, engine)
         manifest["leaves"][key] = {
             "shape": list(arr.shape), "dtype": str(arr.dtype),
             "digest": digest.tobytes().hex(),
         }
         buf = arr
         if root_key is not None:
-            buf = encrypt.encrypt_np(arr, root_key, f"{step}/{key}")
+            buf = (encrypt.encrypt_np(arr, root_key, f"{step}/{key}")
+                   if engine is None else
+                   encrypt.encrypt_np_via_device(arr, root_key,
+                                                 f"{step}/{key}", engine))
         payload[key.replace("/", "__")] = buf
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp"
@@ -85,13 +116,14 @@ def save(directory: str, step: int, tree, *, root_key: str | None = None,
         f.write(msgpack.packb(manifest))
 
     if verify_write:  # read back and parity-check the copy (paper Fig. 1(a))
-        ok, bad = check(directory, step, root_key=root_key)
+        ok, bad = check(directory, step, root_key=root_key, engine=engine)
         if not ok:
             raise IOError(f"checkpoint write verification failed: {bad}")
     return manifest
 
 
-def check(directory: str, step: int, *, root_key: str | None = None):
+def check(directory: str, step: int, *, root_key: str | None = None,
+          engine=None):
     """Parity-verify a checkpoint on disk against its manifest."""
     manifest = _load_manifest(directory, step)
     data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
@@ -99,19 +131,20 @@ def check(directory: str, step: int, *, root_key: str | None = None):
     for key, meta in manifest["leaves"].items():
         raw = data[key.replace("/", "__")]
         if manifest["encrypted"]:
-            raw = encrypt.decrypt_np(raw, root_key, f"{step}/{key}",
-                                     np.dtype(meta["dtype"]),
-                                     tuple(meta["shape"]))
+            raw = _decrypt(raw, root_key, f"{step}/{key}",
+                           np.dtype(meta["dtype"]), tuple(meta["shape"]),
+                           engine)
         else:
             raw = _coerce(raw, meta["dtype"])
-        digest = verify.np_digest(raw)
+        digest = _digest(raw, engine)
         if digest.tobytes().hex() != meta["digest"]:
             bad.append(key)
     return (not bad), bad
 
 
 def restore(directory: str, step: int | None, like, *,
-            root_key: str | None = None, verify_read: bool = True):
+            root_key: str | None = None, verify_read: bool = True,
+            engine=None):
     """Load into the structure of ``like`` (abstract or concrete pytree)."""
     if step is None:
         step = latest_step(directory)
@@ -127,13 +160,13 @@ def restore(directory: str, step: int | None, like, *,
         meta = manifest["leaves"][key]
         raw = data[key.replace("/", "__")]
         if manifest["encrypted"]:
-            raw = encrypt.decrypt_np(raw, root_key, f"{step}/{key}",
-                                     np.dtype(meta["dtype"]),
-                                     tuple(meta["shape"]))
+            raw = _decrypt(raw, root_key, f"{step}/{key}",
+                           np.dtype(meta["dtype"]), tuple(meta["shape"]),
+                           engine)
         else:
             raw = _coerce(raw, meta["dtype"])
         if verify_read:
-            if verify.np_digest(raw).tobytes().hex() != meta["digest"]:
+            if _digest(raw, engine).tobytes().hex() != meta["digest"]:
                 bad.append(key)
         arr = raw.reshape(meta["shape"])
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)

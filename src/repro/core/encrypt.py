@@ -46,14 +46,11 @@ def encrypt_np(arr: np.ndarray, root_key: bytes | str, leaf_path: str) -> np.nda
     Returns a uint8 buffer of the same byte length; pair with the original
     dtype/shape metadata to reconstruct (checkpoint layer stores both).
     """
+    from repro.core.verify import np_words
     k0, k1, ctr = derive_key(root_key, leaf_path)
-    raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-    pad = (-raw.size) % 4
-    padded = np.concatenate([raw, np.zeros(pad, np.uint8)]) if pad else raw
-    words = padded.view(np.uint32)
+    words, nbytes = np_words(arr)
     idx = np.arange(words.size, dtype=np.uint32) + ctr
-    out = (words ^ _np_keystream(idx, k0, k1)).view(np.uint8)
-    return out[:raw.size] if pad else out
+    return (words ^ _np_keystream(idx, k0, k1)).view(np.uint8)[:nbytes]
 
 
 def decrypt_np(buf: np.ndarray, root_key: bytes | str, leaf_path: str,
@@ -78,3 +75,28 @@ def encrypt_device(buf: jnp.ndarray, root_key: bytes | str, leaf_path: str,
     key = jnp.array([k0, k1], dtype=jnp.uint32)
     eng = engine if engine is not None else CimEngine(impl=impl)
     return eng.stream_cipher(buf, key, counter=int(ctr))
+
+
+def encrypt_np_via_device(arr: np.ndarray, root_key: bytes | str,
+                          leaf_path: str, engine) -> np.ndarray:
+    """Device-routed twin of :func:`encrypt_np` (bit-identical bytes).
+
+    The host array's bytes are viewed as the same little-endian uint32
+    stream :func:`encrypt_np` XORs, ciphered on device through ``engine``
+    (single-device or sharded — the keystream is position-keyed, so the
+    shard split changes nothing), and returned as a uint8 buffer of the
+    original byte length.  Checkpoints written this way decrypt with the
+    host path and vice versa.
+    """
+    from repro.core.verify import np_words
+    words, nbytes = np_words(arr)
+    out = np.asarray(encrypt_device(jnp.asarray(words), root_key, leaf_path,
+                                    engine=engine)).view(np.uint8)
+    return out[:nbytes].copy() if nbytes != out.size else out
+
+
+def decrypt_np_via_device(buf: np.ndarray, root_key: bytes | str,
+                          leaf_path: str, dtype, shape, engine) -> np.ndarray:
+    """Inverse of :func:`encrypt_np_via_device`, restoring dtype/shape."""
+    plain = encrypt_np_via_device(buf, root_key, leaf_path, engine)
+    return plain.view(dtype).reshape(shape).copy()

@@ -14,7 +14,11 @@ verifies the copy.  Our framework-scale equivalents:
 Device-side digests route through the banked :class:`repro.core.engine
 .CimEngine` (cycle-accounted bank schedule, DESIGN.md §10); pass ``engine=``
 to share one engine's stats across calls, or ``impl=`` to hit the kernel
-layer directly with a throwaway default engine.
+layer directly with a throwaway default engine.  A mesh-aware
+:class:`repro.core.engine.ShardedCimEngine` drops in unchanged (DESIGN.md
+§11): each leaf's fold then runs sharded and only the per-leaf 512-byte
+digest crosses devices.  ``chunk_words=`` streams leaves larger than one
+bank pass through the engine's chunked mode.
 
 Any single-bit corruption flips exactly one digest bit (XOR linearity), so
 digest equality is a true parity check, not a heuristic hash.
@@ -32,30 +36,71 @@ DIGEST_WIDTH = 128  # uint32 words = 512 bytes
 
 
 def tree_digest(tree, impl: str = "auto",
-                engine: _engine.CimEngine | None = None):
-    """Pytree -> same-structure pytree of (DIGEST_WIDTH,) uint32 digests."""
+                engine: _engine.CimEngine | None = None,
+                chunk_words: int | None = None):
+    """Pytree -> same-structure pytree of (DIGEST_WIDTH,) uint32 digests.
+
+    ``engine`` may be a single-device :class:`~repro.core.engine.CimEngine`
+    or a mesh-aware :class:`~repro.core.engine.ShardedCimEngine` — digests
+    are bit-identical either way.  ``chunk_words`` bounds the per-dispatch
+    footprint via :meth:`~repro.core.engine.CimEngine.digest_stream`.
+    """
     eng = engine if engine is not None else _engine.CimEngine(impl=impl)
-    return jax.tree.map(lambda x: eng.digest(x, DIGEST_WIDTH), tree)
+    if chunk_words is None:
+        fn = lambda x: eng.digest(x, DIGEST_WIDTH)
+    else:
+        fn = lambda x: eng.digest_stream(x, DIGEST_WIDTH,
+                                         chunk_words=chunk_words)
+    return jax.tree.map(fn, tree)
 
 
 def verify_trees(a, b, impl: str = "auto",
-                 engine: _engine.CimEngine | None = None):
+                 engine: _engine.CimEngine | None = None,
+                 chunk_words: int | None = None):
     """Returns (all_ok: bool array, per-leaf ok pytree) comparing digests."""
-    da = tree_digest(a, impl, engine=engine)
-    db = tree_digest(b, impl, engine=engine)
+    da = tree_digest(a, impl, engine=engine, chunk_words=chunk_words)
+    db = tree_digest(b, impl, engine=engine, chunk_words=chunk_words)
     leaf_ok = jax.tree.map(lambda x, y: jnp.all(x == y), da, db)
     return jnp.all(jnp.stack(jax.tree.leaves(leaf_ok))), leaf_ok
 
 
-def np_digest(arr: np.ndarray, digest_width: int = DIGEST_WIDTH) -> np.ndarray:
-    """Host-side digest of any numpy array (byte view -> uint32 stream)."""
+def np_words(arr: np.ndarray, align: int = 4):
+    """View any numpy array's bytes as the little-endian uint32 stream every
+    host-side digest/cipher shares, zero-padding the tail to ``align`` bytes.
+
+    Returns ``(words, nbytes)`` — the uint32 view and the original byte
+    length.  This is the single definition of the host byte layout; the
+    device twins (:func:`np_digest_via_device`,
+    :func:`repro.core.encrypt.encrypt_np_via_device`) route the same words
+    through the engine, which is what makes the two paths bit-compatible.
+    """
     raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-    pad = (-raw.size) % (4 * digest_width)
+    nbytes = raw.size
+    pad = (-nbytes) % align
     if pad:
         raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
-    words = raw.view(np.uint32).reshape(-1, digest_width)
-    return np.bitwise_xor.reduce(words, axis=0)
+    return raw.view(np.uint32), nbytes
+
+
+def np_digest(arr: np.ndarray, digest_width: int = DIGEST_WIDTH) -> np.ndarray:
+    """Host-side digest of any numpy array (byte view -> uint32 stream)."""
+    words, _ = np_words(arr, align=4 * digest_width)
+    return np.bitwise_xor.reduce(words.reshape(-1, digest_width), axis=0)
 
 
 def np_verify(a: np.ndarray, b: np.ndarray) -> bool:
     return bool(np.array_equal(np_digest(a), np_digest(b)))
+
+
+def np_digest_via_device(arr: np.ndarray, engine: _engine.CimEngine,
+                         digest_width: int = DIGEST_WIDTH) -> np.ndarray:
+    """Device-routed twin of :func:`np_digest` (bit-identical).
+
+    Views the host array's bytes as the same little-endian uint32 stream
+    :func:`np_digest` folds, then folds it on device through ``engine`` —
+    so the checkpoint layer can burn digests on the bank stack (sharded or
+    not) while staying byte-compatible with manifests written by the host
+    path.
+    """
+    words, _ = np_words(arr)
+    return np.asarray(engine.digest(jnp.asarray(words), digest_width))

@@ -13,6 +13,7 @@ touching model code.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -36,6 +37,25 @@ def shard_map(f, mesh: Mesh, in_specs, out_specs, manual_axes: set[str]):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=False,
                       auto=frozenset(mesh.axis_names) - set(manual_axes))
+
+
+def pxor(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bitwise-XOR all-reduce over a named mesh axis (inside shard_map).
+
+    XOR has no built-in collective, so all-gather the per-device values and
+    fold them locally, pairwise (log2-depth arithmetic — the *communication*
+    is the one all-gather, ``devices`` copies of ``x`` per device).  The
+    sharded engine only reduces ``digest_width``-word digests (512 bytes
+    each at the default width), so digests are the entire cross-device
+    payload of a sharded digest — the buffer itself never moves.
+    """
+    g = jax.lax.all_gather(x, axis_name, axis=0)      # (devices, ...)
+    while g.shape[0] > 1:
+        half = g.shape[0] // 2
+        folded = g[:half] ^ g[half:2 * half]
+        g = (folded if g.shape[0] % 2 == 0
+             else jnp.concatenate([folded, g[2 * half:]], axis=0))
+    return g[0]
 
 
 def batch_axes(mesh: Mesh, global_batch: int):

@@ -105,14 +105,16 @@ def digest(buf: jnp.ndarray, digest_width: int = 128, impl: str = "auto",
            br: int = 512) -> jnp.ndarray:
     """XOR-parity digest of any array (viewed as a uint32 stream)."""
     impl = _resolve(impl)
-    words = _as_words(buf)
+    words = as_words(buf)
     pad = (-words.shape[0]) % digest_width
     words = jnp.pad(words, (0, pad))  # zeros are XOR-neutral
     words = words.reshape(-1, digest_width)
     if impl == "ref":
         return ref.parity_digest(words, digest_width)
-    r = words.shape[0]
-    br = min(br, r) if r % min(br, r) == 0 else 1
+    # pad rows rather than shrink the tile (zero rows are XOR-neutral for the
+    # fold): shrinking to br=1 on non-divisible row counts explodes the grid
+    # to one row per step.
+    br = min(br, words.shape[0])
     words = _pad_rows(words, br)
     return _parity.parity_digest(words, digest_width=digest_width, br=br,
                                  interpret=(impl == "interpret"))
@@ -159,6 +161,8 @@ def stream_cipher(buf: jnp.ndarray, key: jnp.ndarray, counter: int = 0,
 
     Restricted to uint32 so decryption round-trips bit-exactly; the
     checkpoint layer views other dtypes as uint32 host-side (numpy .view).
+    ``counter`` may be a python int or a traced uint32 scalar — the sharded
+    engine offsets it per device by the shard's word position.
     """
     if buf.dtype != jnp.uint32:
         raise TypeError(f"stream_cipher needs uint32, got {buf.dtype}")
@@ -170,15 +174,18 @@ def stream_cipher(buf: jnp.ndarray, key: jnp.ndarray, counter: int = 0,
     d = 128
     pad = (-n) % d
     w2 = jnp.pad(words, (0, pad)).reshape(-1, d)
-    r = w2.shape[0]
-    br = min(br, r) if r % min(br, r) == 0 else 1
+    # pad rows rather than shrink the tile: pad output is sliced off below,
+    # so the keystream words the pad rows consume never reach the caller.
+    br = min(br, w2.shape[0])
     w2 = _pad_rows(w2, br)
-    k3 = jnp.array([key[0], key[1], jnp.uint32(counter)], dtype=jnp.uint32)
+    k3 = jnp.stack([jnp.asarray(key[0], jnp.uint32),
+                    jnp.asarray(key[1], jnp.uint32),
+                    jnp.asarray(counter, jnp.uint32)])
     out = _cipher.xor_cipher(w2, k3, br=br, interpret=(impl == "interpret"))
     return out.reshape(-1)[:n].reshape(buf.shape)
 
 
-def _as_words(buf: jnp.ndarray) -> jnp.ndarray:
+def as_words(buf: jnp.ndarray) -> jnp.ndarray:
     """Losslessly view any array as a flat uint32 stream (pads odd tails)."""
     flat = buf.reshape(-1)
     size = jnp.dtype(flat.dtype).itemsize

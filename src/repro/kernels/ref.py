@@ -103,5 +103,6 @@ def keystream_word(idx: jnp.ndarray, key0: jnp.ndarray, key1: jnp.ndarray) -> jn
 
 def xor_cipher(words: jnp.ndarray, key: jnp.ndarray, counter: int | jnp.ndarray = 0) -> jnp.ndarray:
     """Encrypt/decrypt (involution) a flat uint32 buffer in counter mode."""
-    idx = jnp.arange(words.shape[0], dtype=jnp.uint32) + jnp.uint32(counter)
+    idx = (jnp.arange(words.shape[0], dtype=jnp.uint32)
+           + jnp.asarray(counter, jnp.uint32))
     return words ^ keystream_word(idx, key[0], key[1])

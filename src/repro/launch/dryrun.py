@@ -6,8 +6,13 @@ MUST be the first two lines, before any other import (jax locks the device
 count at first init):
 """
 import os  # noqa: E402
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+# Drop any inherited device-count flag first: XLA takes the LAST occurrence,
+# so appending the ambient XLA_FLAGS (e.g. the 8-device CI job's) verbatim
+# would silently override the 512-device grid this driver needs.
+os.environ["XLA_FLAGS"] = " ".join(
+    ["--xla_force_host_platform_device_count=512"]
+    + [f for f in os.environ.get("XLA_FLAGS", "").split()
+       if not f.startswith("--xla_force_host_platform_device_count")])
 
 import argparse   # noqa: E402
 import json       # noqa: E402

@@ -14,6 +14,8 @@ slow DCN-class axis that the 1-bit gradient compression targets.
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 try:  # AxisType landed after jax 0.4.x; Auto is that jax's only behavior
     from jax.sharding import AxisType
@@ -31,6 +33,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _make_mesh(shape, axes)
+
+
+def make_engine_mesh(n_devices: int | None = None):
+    """1-D mesh over the host's devices, axis ``bank``.
+
+    The sharded CiM engine's mesh-as-outer-bank-dimension model
+    (DESIGN.md §11): every device carries one local bank stack, so the
+    engine's throughput tier is ``devices x banks x cols`` bits/cycle.
+    Takes the first ``n_devices`` devices (all by default) — unlike the
+    production meshes this axis has no topology constraint, engine traffic
+    is embarrassingly parallel except for the 512-byte digest reduce.
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, host has {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), ("bank",))
 
 
 def make_smoke_mesh(n_devices: int | None = None):

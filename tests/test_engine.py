@@ -87,10 +87,13 @@ def test_simulate_rejects_overflow():
     eng = CimEngine(BankGeometry(banks=2, rows=4, cols=8))
     ok = jnp.zeros((4, 8))        # 2 pairs/bank = 4 rows: fits exactly
     eng.simulate(ok, ok)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="rows"):
         eng.simulate(jnp.zeros((5, 8)), jnp.zeros((5, 8)))  # needs 6 rows
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="exceed bank width"):
         eng.simulate(jnp.zeros((1, 9)), jnp.zeros((1, 9)))  # too wide
+    with pytest.raises(ValueError, match="shapes differ"):
+        eng.simulate(jnp.zeros((2, 8)), jnp.zeros((3, 8)))
+    assert eng.stats.calls == 1   # failed dispatches must not be accounted
 
 
 # ---------------------------------------------------------------------------
@@ -172,3 +175,65 @@ def test_engine_stats_accumulate():
     eng.simulate(jnp.zeros((6, 32)), jnp.zeros((6, 32)))
     assert eng.stats.calls == 2
     assert eng.stats.cycles == eng.cycles_for(64 * 32) + 3  # 6 pairs / 2 banks
+
+
+@pytest.mark.parametrize("method", ["xor", "digest", "cipher", "simulate"])
+def test_jitted_engine_ops_account_once_per_call(method):
+    """Accounting must happen per execution, not per trace: wrapping an
+    engine method in jax.jit and calling it N times records N calls."""
+    eng = CimEngine(BankGeometry(banks=2, rows=8, cols=32), impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 64, dtype=np.uint32))
+    key = jnp.array([1, 2], dtype=jnp.uint32)
+    f = {"xor": lambda: jax.jit(eng.xor)(buf, buf),
+         "digest": lambda: jax.jit(eng.digest)(buf),
+         "cipher": lambda: jax.jit(lambda b: eng.stream_cipher(b, key))(buf),
+         "simulate": lambda: jax.jit(
+             lambda x: eng.simulate(x, x))(jnp.zeros((4, 32)))}[method]
+    n = 3
+    for _ in range(n):
+        jax.block_until_ready(f())
+    jax.effects_barrier()         # flush the per-execution stats callbacks
+    assert eng.stats.calls == n, eng.stats
+    if method != "simulate":
+        assert eng.stats.cycles == n * eng.cycles_for(64 * 32)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [999, 4096, None])
+def test_xor_stream_matches_one_shot(chunk):
+    eng = CimEngine(impl="ref")
+    a = jnp.asarray(RNG.integers(0, 2**32, 100001, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, 100001, dtype=np.uint32))
+    assert np.array_equal(np.asarray(eng.xor_stream(a, b, chunk_words=chunk)),
+                          np.asarray(eng.xor(a, b)))
+    assert np.array_equal(np.asarray(eng.xnor_stream(a, b,
+                                                     chunk_words=chunk)),
+                          np.asarray(eng.xnor(a, b)))
+
+
+@pytest.mark.parametrize("chunk,width", [(999, 128), (4096, 128), (640, 96),
+                                         (None, 128)])
+def test_digest_stream_matches_one_shot(chunk, width):
+    """Stability invariant: the chunked fold equals the one-shot digest for
+    any chunk size (chunks are aligned up to whole digest rows)."""
+    eng = CimEngine(impl="ref")
+    buf = jnp.asarray(RNG.integers(0, 2**32, 100001, dtype=np.uint32))
+    assert np.array_equal(
+        np.asarray(eng.digest_stream(buf, width, chunk_words=chunk)),
+        np.asarray(eng.digest(buf, width)))
+
+
+def test_digest_stream_handles_non_uint32_leaves():
+    eng = CimEngine(impl="ref")
+    x = jnp.asarray(RNG.standard_normal(70001), jnp.float32)
+    assert np.array_equal(np.asarray(eng.digest_stream(x, chunk_words=4096)),
+                          np.asarray(eng.digest(x)))
+
+
+def test_stream_rejects_shape_mismatch():
+    eng = CimEngine(impl="ref")
+    with pytest.raises(ValueError):
+        eng.xor_stream(jnp.zeros(8, jnp.uint32), jnp.zeros(9, jnp.uint32))

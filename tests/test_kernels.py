@@ -134,9 +134,64 @@ def test_cipher_interpret_matches_ref_and_scrambles():
     assert not np.array_equal(np.asarray(c1), np.asarray(c3))
 
 
+def test_cipher_traced_counter_matches_python_int():
+    """The sharded engine offsets the counter per device as a traced uint32;
+    the dispatch must accept it and hash identically to the int path."""
+    buf = jnp.asarray(RNG.integers(0, 2**32, 300, dtype=np.uint32))
+    key = jnp.array([5, 6], dtype=jnp.uint32)
+    want = ops.stream_cipher(buf, key, counter=41, impl="ref")
+    got = jax.jit(lambda c: ops.stream_cipher(buf, key, counter=c,
+                                              impl="ref"))(jnp.uint32(41))
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
 def test_cipher_rejects_non_uint32():
     with pytest.raises(TypeError):
         ops.stream_cipher(jnp.zeros(4, jnp.float32), jnp.zeros(2, jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# grid regression: non-divisible row counts must pad rows, never shrink the
+# tile to br=1 (which explodes the Pallas grid to one row per step)
+# ---------------------------------------------------------------------------
+
+N_ODD = 513 * 128  # 513 tile rows of 128 words: 513 % 512 != 0
+
+
+def _spy(monkeypatch, module, name):
+    seen = {}
+    real = getattr(module, name)
+
+    def wrapper(words, *args, **kw):
+        seen["rows"], seen["br"] = words.shape[0], kw["br"]
+        return real(words, *args, **kw)
+
+    monkeypatch.setattr(module, name, wrapper)
+    return seen
+
+
+def test_digest_grid_never_degenerates_to_one_row(monkeypatch):
+    seen = _spy(monkeypatch, ops._parity, "parity_digest")
+    buf = jnp.asarray(RNG.integers(0, 2**32, N_ODD, dtype=np.uint32))
+    got = ops.digest(buf, impl="interpret")
+    assert seen["br"] == 512, seen            # full tile, not br=1
+    assert seen["rows"] % seen["br"] == 0
+    assert seen["rows"] // seen["br"] == 2    # grid of 2 steps, not 513
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(ops.digest(buf, impl="ref")))
+
+
+def test_cipher_grid_never_degenerates_to_one_row(monkeypatch):
+    seen = _spy(monkeypatch, ops._cipher, "xor_cipher")
+    buf = jnp.asarray(RNG.integers(0, 2**32, N_ODD, dtype=np.uint32))
+    key = jnp.array([3, 4], dtype=jnp.uint32)
+    got = ops.stream_cipher(buf, key, counter=5, impl="interpret")
+    assert seen["br"] == 512, seen
+    assert seen["rows"] % seen["br"] == 0
+    assert seen["rows"] // seen["br"] == 2
+    assert np.array_equal(
+        np.asarray(got),
+        np.asarray(ops.stream_cipher(buf, key, counter=5, impl="ref")))
 
 
 # ---------------------------------------------------------------------------
