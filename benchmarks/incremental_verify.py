@@ -1,0 +1,134 @@
+"""Dirty-fraction sweep for the incremental verification + delta checkpoint
+subsystem (DESIGN.md §12).
+
+The paper's headline workload is the periodic backup scrub: XOR the copy
+against the source, zero means intact.  This sweep measures what the
+DigestCache saves when only a fraction of the pool moved between scrubs —
+engine digest cycles and wall time vs the full re-digest, plus the bytes a
+delta checkpoint writes vs a full one, for dirty fractions of 1%, 10% and
+100% of the tree's chunks.
+
+Run:  PYTHONPATH=src python benchmarks/incremental_verify.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+FRACTIONS = (0.01, 0.10, 1.00)
+
+
+def _build(n_chunks: int, chunk_words: int, n_leaves: int):
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+    per = n_chunks * chunk_words
+    return {f"layer{i}": jnp.asarray(
+        rng.integers(0, 2**32, per, dtype=np.uint32))
+        for i in range(n_leaves)}
+
+
+def _dirty(tree, frac: float, chunk_words: int, seed: int):
+    """Flip one bit in ``frac`` of the tree's chunks, picked globally.
+
+    Leaves that draw no chunk keep their identity (the cache's cheapest
+    path); flip offsets vary per chunk so an even number of same-column
+    flips can't cancel in a leaf's XOR fold (digests are columnwise parity
+    — see test_digest_order_sensitivity_is_columnwise).
+    """
+    rng = np.random.default_rng(seed)
+    spans = [(k, i) for k, buf in tree.items()
+             for i in range(buf.shape[0] // chunk_words)]
+    m = max(1, int(round(frac * len(spans))))
+    by_key: dict = {}
+    for p in rng.choice(len(spans), size=m, replace=False):
+        k, i = spans[int(p)]
+        by_key.setdefault(k, []).append(i)
+    out = dict(tree)
+    for k, idxs in by_key.items():
+        # one batched scatter per leaf: a per-flip .at.set would rebuild the
+        # whole leaf once per chunk (GBs of setup traffic at 100% dirty)
+        import jax.numpy as jnp
+        pos = jnp.asarray([i * chunk_words + int(rng.integers(chunk_words))
+                           for i in idxs])
+        out[k] = tree[k].at[pos].set(tree[k][pos] ^ np.uint32(1))
+    return out, m
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    from repro.checkpoint import ckpt
+    from repro.core import verify
+    from repro.core.engine import CimEngine
+    from repro.core.incremental import DigestCache
+
+    chunk_words = 1 << 10 if smoke else 1 << 14
+    n_chunks = 8 if smoke else 64
+    n_leaves = 2 if smoke else 8
+    tree = _build(n_chunks, chunk_words, n_leaves)
+    nbytes = sum(int(v.size) * 4 for v in tree.values())
+
+    rows = []
+    eng = CimEngine()   # impl="auto": REPRO_KERNEL_IMPL steers the CI matrix
+    cache = DigestCache(engine=eng, chunk_words=chunk_words)
+    t0 = time.perf_counter()
+    cache.digests(tree)                    # prime: full digest pass
+    us_full = (time.perf_counter() - t0) * 1e6
+    full_cycles = eng.stats.by_op["digest"][0]
+    rows.append(("prime_full_digest", us_full,
+                 f"{nbytes/1e6:.0f}MB {full_cycles} digest-cycles "
+                 f"{n_leaves*n_chunks} chunks"))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 0, tree, verify_write=False)
+        base_bytes = os.path.getsize(os.path.join(d, "ckpt_00000000.npz"))
+        for step, frac in enumerate(FRACTIONS, start=1):
+            dirty_tree, k = _dirty(tree, frac, chunk_words, seed=step)
+
+            snap = eng.stats.snapshot()
+            t0 = time.perf_counter()
+            cache.digests(dirty_tree)      # incremental re-verify
+            us = (time.perf_counter() - t0) * 1e6
+            cyc = eng.stats.by_op["digest"][0] - snap.by_op["digest"][0]
+            rows.append((
+                f"reverify_dirty_{int(frac*100):d}pct", us,
+                f"{k}/{n_leaves*n_chunks} chunks {cyc} digest-cycles "
+                f"({full_cycles/max(cyc,1):.1f}x fewer than full)"))
+
+            t0 = time.perf_counter()
+            # cache= keeps the dirty scan O(dirty) too (the cache is already
+            # synced with dirty_tree, so it identity-hits every leaf)
+            ckpt.save_delta(d, step, dirty_tree, base_step=step - 1,
+                            verify_write=False, cache=cache)
+            us = (time.perf_counter() - t0) * 1e6
+            sz = os.path.getsize(os.path.join(d, f"ckpt_{step:08d}.npz"))
+            rows.append((
+                f"save_delta_dirty_{int(frac*100):d}pct", us,
+                f"{sz/1e6:.2f}MB on disk vs {base_bytes/1e6:.2f}MB full"))
+            # keep the cache tracking what's on disk for the next fraction
+            tree = dirty_tree
+
+    # reference: the non-incremental full scan at the same tree size
+    t0 = time.perf_counter()
+    verify.tree_digest(tree, engine=eng)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("reverify_full_scan", us, f"O(tree) reference, {nbytes/1e6:.0f}MB"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tree for CI (seconds, not minutes)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"incremental/{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,8 +9,8 @@ import sys
 import traceback
 
 from benchmarks import (bank_scaling, fig4_functional, fig5_montecarlo,
-                        fig6_xnornet, roofline_bench, table1_latency,
-                        verify_throughput)
+                        fig6_xnornet, incremental_verify, roofline_bench,
+                        table1_latency, verify_throughput)
 
 SUITES = [
     ("fig4", fig4_functional),
@@ -18,6 +18,7 @@ SUITES = [
     ("table1", table1_latency),
     ("fig6", fig6_xnornet),
     ("verify", verify_throughput),
+    ("incremental", incremental_verify),
     ("banks", bank_scaling),
     ("roofline", roofline_bench),
 ]

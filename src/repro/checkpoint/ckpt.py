@@ -6,33 +6,51 @@ into the I/O path:
   manifest, and re-checked after the write (write-verify) and on restore —
   any single-bit corruption anywhere in a shard is detected;
 * optional **XOR stream encryption** (paper Fig. 1(b)): leaves are
-  encrypted with a counter-mode pad keyed by (root key, leaf path), so no
-  pad reuse across leaves or steps.
+  encrypted with a counter-mode pad keyed by (root key, write step, leaf
+  path) — :func:`repro.core.encrypt.pad_path` — so no pad reuse across
+  leaves or steps, full or delta.
 
-Format: one ``.npz`` per host shard + a msgpack manifest
-(shapes/dtypes/digests/step).  Restore is mesh-shape-agnostic: leaves are
-addressed by tree path, so an elastic re-mesh (different device count)
-re-shards on load — index-free addressing is the elasticity story.
+Format: one ``.npz`` per step + a msgpack manifest (shapes/dtypes/digests/
+step).  Restore is mesh-shape-agnostic: leaves are addressed by tree path,
+so an elastic re-mesh (different device count) re-shards on load —
+index-free addressing is the elasticity story.
+
+**Delta checkpoints** (:func:`save_delta`, DESIGN.md §12): a delta step's
+npz stores only leaves whose digest moved against the base manifest; every
+leaf's manifest entry records ``stored_in`` — the step whose npz actually
+holds its bytes — so ``check``/``restore`` resolve a base+delta chain in
+one hop per leaf, and write-verify after a delta re-checks only the leaves
+it wrote.  Restoring a chain is byte-identical to restoring an equivalent
+full checkpoint.  GC that prunes old steps must keep every step a live
+manifest's ``stored_in`` entries point at (the :class:`repro.distributed
+.fault.Runner` only writes full checkpoints, so its GC is unaffected).
+
+Writes are **double-buffered** (:func:`_write_payload`): the device-side
+digest/cipher of leaf *k+1* is dispatched before leaf *k*'s bytes are
+written to the zip, so with ``engine=`` the host I/O of one leaf overlaps
+the device compute of the next (jax dispatch is async; the ``np.asarray``
+at write time is the only sync point).
 
 Both applications run host-side (numpy) by default; pass ``engine=`` (a
 :class:`repro.core.engine.CimEngine` or mesh-aware ``ShardedCimEngine``)
-to ``save``/``check``/``restore`` to burn digests and the cipher on the
-device bank stack instead (DESIGN.md §11).  The two paths are bit-identical
-byte-for-byte, so device-written checkpoints restore through the host path
-and vice versa.
+to ``save``/``save_delta``/``check``/``restore`` to burn digests and the
+cipher on the device bank stack instead (DESIGN.md §11).  The two paths
+are bit-identical byte-for-byte, so device-written checkpoints restore
+through the host path and vice versa.
 """
 
 from __future__ import annotations
 
 import io
-import json
 import os
 import re
-from typing import Any
+import zipfile
+from typing import Any, Callable
 
 import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
 import numpy as np
 import jax
+import jax.numpy as jnp
 import msgpack
 
 from repro.core import encrypt, verify
@@ -66,78 +84,351 @@ def _decrypt(raw, root_key, leaf_path, dtype, shape, engine) -> np.ndarray:
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(_path_str(p) for p in path)
-        out[key] = np.asarray(leaf)
-    return out
+    return {verify.leaf_key(path): np.asarray(leaf) for path, leaf in flat}
 
 
-def _path_str(p) -> str:
-    if hasattr(p, "key"):
-        return str(p.key)
-    if hasattr(p, "idx"):
-        return str(p.idx)
-    return str(p)
+def _leaf_meta(leaf) -> tuple[list, str]:
+    """(shape, dtype-string) without forcing a device-to-host transfer."""
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return list(leaf.shape), str(leaf.dtype)
+    arr = np.asarray(leaf)
+    return list(arr.shape), str(arr.dtype)
+
+
+def _ckpt_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+# -- the double-buffered write path ------------------------------------------
+
+
+def _stage_leaf(arr: np.ndarray, pad_path: str, root_key, engine,
+                dig=None):
+    """Dispatch one leaf's digest/cipher; syncing happens at write time.
+
+    Returns ``(digest, payload_fn)``: ``digest`` is a numpy array or an
+    in-flight device array, ``payload_fn()`` materializes the bytes to
+    write.  With ``engine=`` nothing here blocks — jax dispatch is async —
+    which is what lets :func:`_write_payload` overlap this leaf's device
+    compute with the previous leaf's host write.  ``dig`` skips the digest
+    dispatch when the caller already holds it (save_delta's dirty scan).
+    """
+    if engine is None:
+        if dig is None:
+            dig = verify.np_digest(arr)
+        buf = (arr if root_key is None
+               else encrypt.encrypt_np(arr, root_key, pad_path))
+        return dig, (lambda: buf)
+    if dig is None:
+        words, _ = verify.np_words(arr)
+        dig = engine.digest(jnp.asarray(words), verify.DIGEST_WIDTH)
+    if root_key is None:
+        return dig, (lambda: arr)
+    # the staged cipher keeps the host byte contract in encrypt.py — one
+    # definition shared with the synchronous encrypt_np_via_device path
+    return dig, encrypt.encrypt_np_via_device_staged(arr, root_key, pad_path,
+                                                     engine)
+
+
+def _write_payload(path: str, flat: dict[str, np.ndarray],
+                   stage: Callable) -> dict[str, np.ndarray]:
+    """np.savez-compatible writer with a one-leaf double buffer.
+
+    ``stage(key, arr)`` dispatches leaf work (see :func:`_stage_leaf`); the
+    loop stages leaf k+1 *before* flushing leaf k to the zip, so device
+    digest/cipher of the next leaf overlaps host I/O of the current one.
+    Returns the per-leaf digests (synced numpy arrays).
+    """
+    digs: dict[str, np.ndarray] = {}
+
+    def flush(zf, key, staged):
+        dig, payload_fn = staged
+        buf = io.BytesIO()
+        np.lib.format.write_array(buf, np.asarray(payload_fn()),
+                                  allow_pickle=False)
+        zf.writestr(key.replace("/", "__") + ".npy", buf.getvalue())
+        digs[key] = np.asarray(dig)
+
+    with open(path, "wb") as f, \
+            zipfile.ZipFile(f, "w", zipfile.ZIP_STORED,
+                            allowZip64=True) as zf:
+        pending = None
+        for key, arr in flat.items():
+            nxt = (key, stage(key, arr))        # dispatch leaf k+1
+            if pending is not None:
+                flush(zf, *pending)             # ...while writing leaf k
+            pending = nxt
+        if pending is not None:
+            flush(zf, *pending)
+    return digs
+
+
+# -- save: full and delta -----------------------------------------------------
 
 
 def save(directory: str, step: int, tree, *, root_key: str | None = None,
          verify_write: bool = True, engine=None) -> dict:
-    """Write a checkpoint; returns the manifest (also written to disk).
+    """Write a full checkpoint; returns the manifest (also written to disk).
 
     ``engine=`` routes digests and the cipher through the device bank stack
-    (bit-identical to the host path, but cycle-accounted and sharded when
-    the engine is a ``ShardedCimEngine``).
+    (bit-identical to the host path, but cycle-accounted, sharded when the
+    engine is a ``ShardedCimEngine``, and overlapped with the host write by
+    the double buffer).
     """
     os.makedirs(directory, exist_ok=True)
+    _refuse_clobbering_chained_base(directory, step)
     flat = _flatten(tree)
-    manifest: dict[str, Any] = {"step": step, "leaves": {}, "encrypted":
-                                root_key is not None}
-    payload = {}
-    for key, arr in flat.items():
-        digest = _digest(arr, engine)
-        manifest["leaves"][key] = {
-            "shape": list(arr.shape), "dtype": str(arr.dtype),
-            "digest": digest.tobytes().hex(),
-        }
-        buf = arr
-        if root_key is not None:
-            buf = (encrypt.encrypt_np(arr, root_key, f"{step}/{key}")
-                   if engine is None else
-                   encrypt.encrypt_np_via_device(arr, root_key,
-                                                 f"{step}/{key}", engine))
-        payload[key.replace("/", "__")] = buf
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:      # file handle: atomic rename, no suffix
-        np.savez(f, **payload)      # munging from np.savez
+    path = _ckpt_path(directory, step)
+    tmp = path + ".tmp"                 # write+rename: atomic publish
+    digs = _write_payload(
+        tmp, flat,
+        lambda key, arr: _stage_leaf(arr, encrypt.pad_path(step, key),
+                                     root_key, engine))
     os.replace(tmp, path)
-    with open(os.path.join(directory, f"manifest_{step:08d}.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-
+    manifest: dict[str, Any] = {
+        "step": step, "base_step": None, "encrypted": root_key is not None,
+        "leaves": {key: {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                         "digest": digs[key].tobytes().hex(),
+                         "stored_in": step}
+                   for key, arr in flat.items()}}
     if verify_write:  # read back and parity-check the copy (paper Fig. 1(a))
-        ok, bad = check(directory, step, root_key=root_key, engine=engine)
-        if not ok:
-            raise IOError(f"checkpoint write verification failed: {bad}")
+        _verify_or_unpublish(directory, step, manifest, root_key, engine,
+                             None, path)
+    _write_manifest(directory, step, manifest)
     return manifest
 
 
+def save_delta(directory: str, step: int, tree, *,
+               base_step: int | None = None, root_key: str | None = None,
+               verify_write: bool = True, engine=None, cache=None) -> dict:
+    """Write a delta checkpoint: only leaves whose digest moved vs the base.
+
+    ``base_step`` defaults to the latest step on disk (which may itself be
+    a delta — chains compose, each leaf resolves in one hop through its
+    ``stored_in`` entry).  Write-verify re-checks only the leaves this step
+    actually wrote.  ``cache`` (a :class:`repro.core.incremental
+    .DigestCache`) makes the dirty scan itself incremental — O(dirty-chunk)
+    engine dispatch instead of a full re-digest; without it every leaf is
+    re-digested (but still only dirty leaves are written).  ``cache`` also
+    makes dirtiness *exact*: leaves the cache's word-compare observed
+    changing are stored even when their XOR-parity digest collides with
+    the base's (an even number of flips per digest column cancels — e.g.
+    swapping two aligned blocks); the cacheless scan can only compare
+    digests and would skip such a leaf.  Exactness requires the cache to
+    have seen the base-state bytes (prime it at or before the base save):
+    leaves the cache first meets at save time have no comparison history
+    and are conservatively stored — an unprimed cache degrades to a full
+    save, never to trusting a collidable digest.
+
+    Restoring ``step`` is byte-identical to restoring a full checkpoint of
+    the same tree; encrypted leaves re-written here draw fresh pads keyed
+    by this step (:func:`repro.core.encrypt.pad_path`).
+    """
+    os.makedirs(directory, exist_ok=True)
+    if base_step is None:
+        base_step = latest_step(directory)
+    if base_step is None:
+        raise FileNotFoundError(
+            f"no base checkpoint under {directory} to delta against; "
+            "write a full save() first")
+    if step <= base_step:
+        # step == base_step would os.replace the base npz the new manifest's
+        # clean leaves still point at — silent data loss; chains move forward.
+        raise ValueError(
+            f"delta step {step} must be greater than its base {base_step}")
+    _refuse_clobbering_chained_base(directory, step)
+    base = _load_manifest(directory, base_step)
+    if base["encrypted"] != (root_key is not None):
+        raise ValueError(
+            f"delta step {step} and base step {base_step} disagree on "
+            "encryption; a chain must be uniformly "
+            + ("encrypted" if base["encrypted"] else "plain"))
+
+    # flatten leaves WITHOUT np.asarray: a clean device leaf must never be
+    # transferred to host — with cache= the whole write path moves O(dirty)
+    # bytes, the subsystem's point (without a cache the digest scan still
+    # pulls every leaf host-side, so pass cache= for large device trees).
+    flat_paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = {verify.leaf_key(p): leaf for p, leaf in flat_paths}
+    metas = {k: _leaf_meta(leaf) for k, leaf in leaves.items()}
+    if cache is not None:
+        if engine is not None and engine is not cache.engine:
+            # same conflict tree_digest refuses: the dirty scan would
+            # dispatch (and cycle-account) on cache.engine, not engine=
+            raise ValueError("save_delta: cache= and engine= conflict — the "
+                             "dirty scan digests through cache.engine; pass "
+                             "the same engine (or build the cache from it)")
+        if cache.digest_width != verify.DIGEST_WIDTH:
+            # manifest digests are DIGEST_WIDTH words; a different cache
+            # width would mark every leaf dirty AND poison the manifest
+            # with digests check()/restore() can never reproduce
+            raise ValueError(
+                f"save_delta: cache digest_width={cache.digest_width} must "
+                f"be the manifest width {verify.DIGEST_WIDTH}")
+        digs = {k: np.asarray(d)
+                for k, d in _flatten(cache.digests(tree)).items()}
+        # exact change evidence from the cache's word-compare: a leaf it
+        # observed changing since the last save is stored even if its
+        # XOR-parity digest collides with the base's (even flips per digest
+        # column cancel — e.g. swapping two aligned blocks leaves the
+        # parity unchanged).  Accumulated across passes: the observing
+        # scrub may have run earlier, leaving the cache already synced.
+        observed = cache.observed_since_save
+        # a leaf the cache first saw in the digests() call above has no
+        # comparison history — the cache cannot attest it is clean, so it
+        # is stored (an unprimed cache degrades to a full save, never to
+        # silently trusting a collidable digest).
+        unproven = cache.last_leaf_new
+    else:
+        digs = {k: _digest(np.asarray(leaf), engine)
+                for k, leaf in leaves.items()}
+        observed, unproven = {}, set()
+    base_leaves = base["leaves"]
+    # digests cover bytes only: a dtype/shape re-interpretation with identical
+    # bytes must still be re-stored or the plain restore path would coerce
+    # the base bytes through the wrong dtype.
+    dirty = [key for key in leaves
+             if key not in base_leaves
+             or observed.get(key, 0) > 0
+             or key in unproven
+             or digs[key].tobytes().hex() != base_leaves[key]["digest"]
+             or metas[key][0] != list(base_leaves[key]["shape"])
+             or metas[key][1] != base_leaves[key]["dtype"]]
+
+    path = _ckpt_path(directory, step)
+    tmp = path + ".tmp"
+    _write_payload(
+        tmp, {k: np.asarray(leaves[k]) for k in dirty},   # dirty only
+        lambda key, arr: _stage_leaf(arr, encrypt.pad_path(step, key),
+                                     root_key, engine, dig=digs[key]))
+    os.replace(tmp, path)
+
+    dirty_set = set(dirty)
+    manifest: dict[str, Any] = {
+        "step": step, "base_step": base_step,
+        "encrypted": root_key is not None,
+        "leaves": {key: {
+            "shape": metas[key][0], "dtype": metas[key][1],
+            "digest": digs[key].tobytes().hex(),
+            "stored_in": (step if key in dirty_set else
+                          int(base_leaves[key].get("stored_in", base_step))),
+        } for key in leaves}}
+    if verify_write:  # delta write-verify: only the leaves written here
+        _verify_or_unpublish(directory, step, manifest, root_key, engine,
+                             dirty, path)
+    _write_manifest(directory, step, manifest)
+    if cache is not None:
+        cache.mark_saved()   # evidence durably consumed (kept on failure)
+    return manifest
+
+
+def _verify_or_unpublish(directory: str, step: int, manifest: dict,
+                         root_key, engine, leaves, npz_path: str) -> None:
+    """Write-verify against the *in-memory* manifest, before it is published.
+
+    A verify failure must not leave the step on disk: a published-but-bad
+    step would become latest_step() — the next delta's default base — and
+    its manifest records the intended digests, so the corruption would read
+    as clean forever after.  Remove the npz and raise instead.
+    """
+    ok, bad = _check_manifest(directory, step, manifest, root_key=root_key,
+                              engine=engine, leaves=leaves)
+    if not ok:
+        os.remove(npz_path)
+        raise IOError(f"checkpoint write verification failed at step {step}, "
+                      f"step unpublished: {bad}")
+
+
+def _write_manifest(directory: str, step: int, manifest: dict) -> None:
+    """Atomic publish: the manifest is the step's publish record
+    (latest_step keys off it), so a torn half-written manifest must be
+    impossible — write-then-rename, same as the npz."""
+    path = os.path.join(directory, f"manifest_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(manifest))
+    os.replace(tmp, path)
+
+
+def _refuse_clobbering_chained_base(directory: str, step: int) -> None:
+    """Refuse to overwrite a step a newer manifest's chain still points at.
+
+    Before delta chains every step was self-contained and re-saving an old
+    step was merely odd; now a newer delta's ``stored_in`` entries may name
+    this step as the only copy of their clean leaves, and os.replace-ing
+    its npz would make that newer step permanently unrestorable.
+    """
+    if not os.path.isdir(directory):
+        return
+    for f in os.listdir(directory):
+        m = re.match(r"manifest_(\d+)\.msgpack$", f)
+        if not m or (other_step := int(m.group(1))) <= step:
+            continue
+        try:
+            other = _load_manifest(directory, other_step)
+        except (msgpack.exceptions.UnpackException, ValueError, KeyError,
+                FileNotFoundError):
+            continue        # torn (crashed write) or vanished: not a chain
+        # any other error (EACCES, I/O) propagates — silently skipping
+        # would disable the data-loss guard exactly when disks misbehave
+        if any(int(meta.get("stored_in", other_step)) == step
+               for meta in other["leaves"].values()):
+            raise ValueError(
+                f"step {step} holds the only copy of leaves that step "
+                f"{other_step}'s delta chain references; overwriting it "
+                "would orphan that chain — save to a new step instead")
+
+
+# -- read side: chain-resolving check/restore ---------------------------------
+
+
+def _load_payloads(directory: str, metas: dict, default_step: int) -> dict:
+    """Open every npz a set of manifest entries stores bytes in."""
+    steps = {int(m.get("stored_in", default_step)) for m in metas.values()}
+    out = {}
+    for s in steps:
+        p = _ckpt_path(directory, s)
+        if not os.path.exists(p):
+            raise FileNotFoundError(
+                f"step {default_step} references leaves stored in step {s}, "
+                f"but {p} is missing (delta base pruned?)")
+        out[s] = np.load(p)
+    return out
+
+
+def _read_leaf(payloads: dict, key: str, meta: dict, encrypted: bool,
+               root_key, engine, default_step: int) -> np.ndarray:
+    stored_in = int(meta.get("stored_in", default_step))
+    raw = payloads[stored_in][key.replace("/", "__")]
+    if encrypted:
+        return _decrypt(raw, root_key, encrypt.pad_path(stored_in, key),
+                        np.dtype(meta["dtype"]), tuple(meta["shape"]), engine)
+    return _coerce(raw, meta["dtype"])
+
+
 def check(directory: str, step: int, *, root_key: str | None = None,
-          engine=None):
-    """Parity-verify a checkpoint on disk against its manifest."""
-    manifest = _load_manifest(directory, step)
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+          engine=None, leaves: list[str] | None = None):
+    """Parity-verify a checkpoint on disk against its manifest.
+
+    Follows delta chains (each leaf is read from its ``stored_in`` step);
+    ``leaves=`` restricts the check to a subset (the delta write-verify
+    path re-checks only what it wrote).
+    """
+    return _check_manifest(directory, step, _load_manifest(directory, step),
+                           root_key=root_key, engine=engine, leaves=leaves)
+
+
+def _check_manifest(directory: str, step: int, manifest: dict, *,
+                    root_key=None, engine=None, leaves=None):
+    metas = manifest["leaves"]
+    if leaves is not None:
+        metas = {k: metas[k] for k in leaves}
+    payloads = _load_payloads(directory, metas, step)
     bad = []
-    for key, meta in manifest["leaves"].items():
-        raw = data[key.replace("/", "__")]
-        if manifest["encrypted"]:
-            raw = _decrypt(raw, root_key, f"{step}/{key}",
-                           np.dtype(meta["dtype"]), tuple(meta["shape"]),
-                           engine)
-        else:
-            raw = _coerce(raw, meta["dtype"])
-        digest = _digest(raw, engine)
-        if digest.tobytes().hex() != meta["digest"]:
+    for key, meta in metas.items():
+        raw = _read_leaf(payloads, key, meta, manifest["encrypted"],
+                         root_key, engine, step)
+        if _digest(raw, engine).tobytes().hex() != meta["digest"]:
             bad.append(key)
     return (not bad), bad
 
@@ -145,26 +436,25 @@ def check(directory: str, step: int, *, root_key: str | None = None,
 def restore(directory: str, step: int | None, like, *,
             root_key: str | None = None, verify_read: bool = True,
             engine=None):
-    """Load into the structure of ``like`` (abstract or concrete pytree)."""
+    """Load into the structure of ``like`` (abstract or concrete pytree).
+
+    Delta chains resolve transparently: the result is byte-identical to
+    restoring a full checkpoint of the same tree.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     manifest = _load_manifest(directory, step)
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    payloads = _load_payloads(directory, manifest["leaves"], step)
     flat, tdef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     bad = []
     for path, leaf in flat:
-        key = "/".join(_path_str(p) for p in path)
+        key = verify.leaf_key(path)
         meta = manifest["leaves"][key]
-        raw = data[key.replace("/", "__")]
-        if manifest["encrypted"]:
-            raw = _decrypt(raw, root_key, f"{step}/{key}",
-                           np.dtype(meta["dtype"]), tuple(meta["shape"]),
-                           engine)
-        else:
-            raw = _coerce(raw, meta["dtype"])
+        raw = _read_leaf(payloads, key, meta, manifest["encrypted"],
+                         root_key, engine, step)
         if verify_read:
             if _digest(raw, engine).tobytes().hex() != meta["digest"]:
                 bad.append(key)
@@ -176,10 +466,19 @@ def restore(directory: str, step: int | None, like, *,
 
 
 def latest_step(directory: str) -> int | None:
+    """Latest *published* step: the manifest is the publish record.
+
+    A step counts only when both its manifest and npz exist — a crash in
+    the window between the npz replace and the post-verify manifest write
+    leaves an orphan npz that must stay invisible here, or restore(None)
+    and the next save_delta's default base would wedge on the missing
+    manifest instead of using the last intact step.
+    """
     if not os.path.isdir(directory):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    steps = [s for f in os.listdir(directory)
+             if (m := re.match(r"manifest_(\d+)\.msgpack$", f))
+             and os.path.exists(_ckpt_path(directory, s := int(m.group(1))))]
     return max(steps) if steps else None
 
 

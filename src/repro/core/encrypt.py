@@ -18,6 +18,19 @@ import numpy as np
 import jax.numpy as jnp
 
 
+def pad_path(step: int, leaf_key: str) -> str:
+    """Canonical pad-derivation path for a checkpoint leaf written at
+    ``step``.
+
+    The single definition shared by save/save_delta/check/restore — pads
+    are keyed by the step the leaf's bytes were *written* at (a delta
+    chain's ``stored_in``), so a leaf re-encrypted at a later delta step
+    draws a fresh pad and no (key, counter) position is ever reused across
+    the chain.
+    """
+    return f"{step}/{leaf_key}"
+
+
 def derive_key(root_key: bytes | str, leaf_path: str):
     """(key0, key1, counter_base) uint32 triple from root key + leaf path."""
     if isinstance(root_key, str):
@@ -77,6 +90,29 @@ def encrypt_device(buf: jnp.ndarray, root_key: bytes | str, leaf_path: str,
     return eng.stream_cipher(buf, key, counter=int(ctr))
 
 
+def encrypt_np_via_device_staged(arr: np.ndarray, root_key: bytes | str,
+                                 leaf_path: str, engine):
+    """Staged twin of :func:`encrypt_np_via_device`: dispatch now,
+    materialize later.
+
+    The cipher is dispatched immediately (jax dispatch is async) and a
+    zero-argument ``materialize()`` closure is returned; calling it is the
+    only sync point.  The checkpoint writer's double buffer uses this to
+    overlap one leaf's device cipher with another leaf's host write while
+    keeping the host byte contract in exactly one place.
+    """
+    from repro.core.verify import np_words
+    words, nbytes = np_words(arr)
+    enc = encrypt_device(jnp.asarray(words), root_key, leaf_path,
+                         engine=engine)
+
+    def materialize() -> np.ndarray:
+        out = np.asarray(enc).view(np.uint8)
+        return out[:nbytes].copy() if nbytes != out.size else out
+
+    return materialize
+
+
 def encrypt_np_via_device(arr: np.ndarray, root_key: bytes | str,
                           leaf_path: str, engine) -> np.ndarray:
     """Device-routed twin of :func:`encrypt_np` (bit-identical bytes).
@@ -88,11 +124,7 @@ def encrypt_np_via_device(arr: np.ndarray, root_key: bytes | str,
     original byte length.  Checkpoints written this way decrypt with the
     host path and vice versa.
     """
-    from repro.core.verify import np_words
-    words, nbytes = np_words(arr)
-    out = np.asarray(encrypt_device(jnp.asarray(words), root_key, leaf_path,
-                                    engine=engine)).view(np.uint8)
-    return out[:nbytes].copy() if nbytes != out.size else out
+    return encrypt_np_via_device_staged(arr, root_key, leaf_path, engine)()
 
 
 def decrypt_np_via_device(buf: np.ndarray, root_key: bytes | str,

@@ -32,6 +32,7 @@ import dataclasses
 import math
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
@@ -93,15 +94,32 @@ class BankGeometry(NamedTuple):
 
 @dataclasses.dataclass
 class EngineStats:
-    """Cycle/op counters accumulated across engine calls."""
+    """Cycle/op counters accumulated across engine calls.
+
+    ``by_op`` breaks the same totals down per op kind ("xor", "digest",
+    "cipher", ...) so consumers like the incremental verifier can assert
+    *which* traffic a code path generated; :meth:`snapshot` captures the
+    counters so a later ``stats.cycles - snap.cycles`` measures exactly one
+    region (the incremental tests pin O(dirty-chunks) dispatch this way).
+    """
     cycles: int = 0
     bit_ops: int = 0
     calls: int = 0
+    by_op: dict = dataclasses.field(default_factory=dict)
 
-    def account(self, cycles: int, bit_ops: int) -> None:
+    def account(self, cycles: int, bit_ops: int, op: str = "bulk") -> None:
         self.cycles += cycles
         self.bit_ops += bit_ops
         self.calls += 1
+        per = self.by_op.setdefault(op, [0, 0, 0])
+        per[0] += cycles
+        per[1] += bit_ops
+        per[2] += 1
+
+    def snapshot(self) -> "EngineStats":
+        """Frozen copy of the counters (deep-copies ``by_op``)."""
+        return dataclasses.replace(
+            self, by_op={k: list(v) for k, v in self.by_op.items()})
 
     @property
     def ops_per_cycle(self) -> float:
@@ -128,7 +146,7 @@ class CimEngine:
         return -(-nbits // self.geometry.bits_per_cycle)
 
     def _account_raw(self, cycles: int, bit_ops: int,
-                     *operands: jnp.ndarray) -> None:
+                     *operands: jnp.ndarray, op: str = "bulk") -> None:
         """Record stats exactly once per *execution*, not per trace.
 
         Cycle/op counts derive from static shapes, so they are known at
@@ -139,26 +157,27 @@ class CimEngine:
         reading stats that jitted calls produced).
         """
         if _under_trace(operands):
-            jax.debug.callback(lambda: self.stats.account(cycles, bit_ops))
+            jax.debug.callback(
+                lambda: self.stats.account(cycles, bit_ops, op))
         else:
-            self.stats.account(cycles, bit_ops)
+            self.stats.account(cycles, bit_ops, op)
 
-    def _account(self, *buffers: jnp.ndarray) -> None:
+    def _account(self, *buffers: jnp.ndarray, op: str = "bulk") -> None:
         nbits = max(b.size * b.dtype.itemsize * 8 for b in buffers)
-        self._account_raw(self.cycles_for(nbits), nbits, *buffers)
+        self._account_raw(self.cycles_for(nbits), nbits, *buffers, op=op)
 
     # -- engine path: packed uint32 buffers ----------------------------------
 
     def xor(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         """Bulk XOR of two same-shape uint32 buffers (one pass)."""
         out = ops.bulk_op(a, b, "xor", impl=self.impl)
-        self._account(a)  # after dispatch: failed calls don't skew stats
+        self._account(a, op="xor")  # after dispatch: failures don't skew stats
         return out
 
     def xnor(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         """Bulk XNOR — complementary rail, same cycle count."""
         out = ops.bulk_op(a, b, "xnor", impl=self.impl)
-        self._account(a)
+        self._account(a, op="xnor")
         return out
 
     def digest(self, buf: jnp.ndarray, digest_width: int = 128) -> jnp.ndarray:
@@ -168,18 +187,36 @@ class CimEngine:
         same one-op-per-bit stream as :meth:`xor`.
         """
         out = ops.digest(buf, digest_width, impl=self.impl)
-        self._account(buf)
+        self._account(buf, op="digest")
         return out
 
     def verify_copy(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-        """Paper Fig. 1(a): XOR source against copy, all-zero means intact."""
-        return jnp.logical_not(jnp.any(self.xor(a, b)))
+        """Paper Fig. 1(a): XOR source against copy, all-zero means intact.
+
+        Accepts any same-shape/dtype buffer pair — operands are viewed as
+        the canonical uint32 word stream (:func:`repro.kernels.ops.as_words`)
+        before the bulk XOR, which is uint32-only.  Host numpy operands are
+        inspected before any jax conversion, so 64-bit buffers compare
+        byte-true even with x64 off (``jnp.asarray`` would downcast them
+        and a corruption in the dropped bytes would read as intact).
+        """
+        if not isinstance(a, jax.Array):
+            a = np.asarray(a)
+        if not isinstance(b, jax.Array):
+            b = np.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            raise ValueError(
+                "verify_copy compares a buffer against its copy: operands "
+                f"must share shape/dtype, got {a.shape}/{a.dtype} vs "
+                f"{b.shape}/{b.dtype}")
+        return jnp.logical_not(jnp.any(self.xor(ops.as_words(a),
+                                                ops.as_words(b))))
 
     def stream_cipher(self, buf: jnp.ndarray, key: jnp.ndarray,
                       counter: int = 0) -> jnp.ndarray:
         """Paper Fig. 1(b): counter-mode XOR pad over the bank stack."""
         out = ops.stream_cipher(buf, key, counter=counter, impl=self.impl)
-        self._account(buf)
+        self._account(buf, op="cipher")
         return out
 
     # -- chunked streaming: buffers larger than one bank pass -----------------
@@ -237,6 +274,34 @@ class CimEngine:
             dig = dig ^ self.digest(words[i:i + chunk], digest_width)
         return dig
 
+    def digest_chunks(self, buf: jnp.ndarray, chunk_words: int | None = None,
+                      digest_width: int = 128) -> jnp.ndarray:
+        """Chunk-level digest export: one digest row per ``chunk_words`` slab.
+
+        Returns a ``(n_chunks, digest_width)`` uint32 matrix — row ``i``
+        equals :meth:`digest` of words ``[i*chunk, (i+1)*chunk)`` of the
+        stream (bit-exactly; XOR is exact in uint32).  Chunks are aligned
+        to whole digest rows (same rule as :meth:`digest_stream`), so
+        XOR-folding the matrix rows equals the one-shot digest of the
+        whole buffer.  The full matrix is ONE fused device fold (priming a
+        :class:`repro.core.incremental.DigestCache` over thousands of
+        chunks must not pay per-chunk dispatch overhead); the incremental
+        verifier's dirty-chunk *re*-digests go through :meth:`digest` per
+        chunk, which is what makes its traffic O(dirty).  Cycle accounting
+        is the same one-op-per-bit stream either way.
+        """
+        words = ops.as_words(buf)
+        chunk = self._chunk_words(chunk_words, digest_width)
+        n = words.shape[0]
+        n_chunks = max(1, -(-n // chunk))
+        if n_chunks == 1:
+            return jnp.stack([self.digest(words, digest_width)])
+        w2 = jnp.pad(words, (0, n_chunks * chunk - n))  # zeros: XOR-neutral
+        m = w2.reshape(n_chunks, chunk // digest_width, digest_width)
+        out = jax.lax.reduce(m, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+        self._account(words, op="digest")
+        return out
+
     # -- circuit path: the analog model, banked ------------------------------
 
     def simulate(self, bits_a: jnp.ndarray, bits_b: jnp.ndarray,
@@ -270,7 +335,7 @@ class CimEngine:
         state = cim.make_array(cells)
         row_a = 2 * jnp.arange(pairs)
         out = cim.compute(state, row_a, row_a + 1, op)     # (banks, P, C)
-        self._account_raw(pairs, n * c, bits_a)
+        self._account_raw(pairs, n * c, bits_a, op="simulate")
         return out.reshape(banks * pairs, c)[:n]
 
 
@@ -377,7 +442,7 @@ class ShardedCimEngine(CimEngine):
         wa, n = self._shard_words(a.reshape(-1))
         wb, _ = self._shard_words(b.reshape(-1))
         out = self._sharded(op, lambda: self._build_bulk(op))(wa, wb)
-        self._account(a)
+        self._account(a, op=op)
         return out.reshape(-1)[:n].reshape(a.shape)
 
     def xor(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -393,8 +458,20 @@ class ShardedCimEngine(CimEngine):
         w2, _ = self._shard_words(words, math.lcm(128, digest_width))
         out = self._sharded(("digest", digest_width),
                             lambda: self._build_digest(digest_width))(w2)
-        self._account(buf)
+        self._account(buf, op="digest")
         return out
+
+    def digest_chunks(self, buf: jnp.ndarray, chunk_words: int | None = None,
+                      digest_width: int = 128) -> jnp.ndarray:
+        """Per-chunk *sharded* dispatch: each row folds across the mesh, so
+        only 512-byte partials cross devices — the single-device fused fold
+        would pull the whole buffer onto one device instead."""
+        words = ops.as_words(buf)
+        chunk = self._chunk_words(chunk_words, digest_width)
+        n = words.shape[0]
+        rows = [self.digest(words[i:i + chunk], digest_width)
+                for i in range(0, max(n, 1), chunk)]
+        return jnp.stack(rows)
 
     def stream_cipher(self, buf: jnp.ndarray, key: jnp.ndarray,
                       counter: int = 0) -> jnp.ndarray:
@@ -405,5 +482,5 @@ class ShardedCimEngine(CimEngine):
                         jnp.asarray(key[1], jnp.uint32),
                         jnp.asarray(counter, jnp.uint32)])
         out = self._sharded("cipher", self._build_cipher)(w2, k3)
-        self._account(buf)
+        self._account(buf, op="cipher")
         return out.reshape(-1)[:n].reshape(buf.shape)

@@ -1,0 +1,280 @@
+"""Incremental verification — the paper's backup-scrub workload without the
+redundant traffic.
+
+The paper's Fig. 1(a) story is periodic verification of a massive data pool:
+XOR the copy against the source, all-zero means intact.  At framework scale
+:func:`repro.core.verify.tree_digest` already reduces the *comparison*
+traffic to 512-byte digests — but it still re-digests every leaf on every
+scan, even when a training step touched a fraction of the tree.  The in-DRAM
+bulk X(N)OR line (Angizi & Fan, 2019) makes the point that the win of
+memory-side logic is *not moving data you don't have to*; this module
+applies it to the digest pass itself:
+
+* :class:`ChunkedDigest` — a per-leaf ``(n_chunks, digest_width)`` digest
+  matrix, one row per fixed-size chunk of the leaf's uint32 word stream,
+  computed through the engine's chunk-level export
+  (:meth:`repro.core.engine.CimEngine.digest_chunks`).  XOR-folding the
+  rows equals the one-shot digest of the leaf (chunks are aligned to whole
+  digest rows, same invariant as ``digest_stream``), so the matrix refines
+  the existing digest without changing it.
+* :class:`DigestCache` — keyed by tree path, retains each leaf's last-seen
+  word stream and digest matrix.  Re-digesting a tree then costs engine
+  traffic proportional to what *changed*: unchanged leaf objects are
+  identity-hits (zero work), changed leaves get a single fused word-compare
+  to locate dirty chunks (no digest dispatch — this is the cheap in-memory
+  XOR+zero-test the paper makes free), and only dirty chunks are
+  re-dispatched through the engine.  ``engine.stats`` therefore shows
+  O(dirty-chunks) digest cycles, not O(tree) — pinned by
+  ``tests/test_incremental.py``.
+
+Both engine classes drop in: a :class:`repro.core.engine.ShardedCimEngine`
+digests each dirty chunk sharded, so the incremental scan scales across the
+mesh exactly like the full scan (DESIGN.md §12).
+
+The identity tier only trusts *immutable* leaves (jax arrays): any numpy
+leaf passed as the same object falls through to the word-compare — even
+read-only flags can't prove a host buffer didn't mutate (a frozen view
+still aliases its writable base) — so in-place host-side updates are
+always detected (at the cost of the compare pass).  The retained word
+streams make the cache the
+reference copy of the pool: memory cost is one extra copy of the tree,
+which is the backup being verified in the paper's workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import verify as _verify
+from repro.core.verify import DIGEST_WIDTH, leaf_key
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class ChunkedDigest:
+    """Per-chunk digest matrix of one leaf's uint32 word stream.
+
+    ``chunks[i]`` is the XOR-parity digest of words
+    ``[i*chunk_words, (i+1)*chunk_words)``; :meth:`digest` folds the rows
+    into the leaf's ordinary one-shot digest.
+    """
+    chunks: np.ndarray          # (n_chunks, digest_width) uint32, host-side
+    chunk_words: int
+    nwords: int                 # unpadded length of the word stream
+    digest_width: int = DIGEST_WIDTH
+    _folded: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)  # memoized digest() fold
+
+    @property
+    def n_chunks(self) -> int:
+        return self.chunks.shape[0]
+
+    @classmethod
+    def compute(cls, buf, engine: _engine.CimEngine,
+                chunk_words: int | None = None,
+                digest_width: int = DIGEST_WIDTH) -> "ChunkedDigest":
+        """Full compute through the engine's chunk-level digest export."""
+        words = _leaf_words(buf)
+        chunk = engine._chunk_words(chunk_words, digest_width)
+        rows = np.asarray(engine.digest_chunks(words, chunk, digest_width))
+        return cls(chunks=rows, chunk_words=chunk,
+                   nwords=int(words.shape[0]), digest_width=digest_width)
+
+    def digest(self) -> np.ndarray:
+        """Whole-leaf digest: XOR fold of the chunk rows (bit-identical to
+        ``ops.digest`` of the full stream).  Memoized — identity-tier cache
+        hits must not re-fold a huge matrix on every scrub; updates build a
+        new ChunkedDigest, so the memo can never go stale."""
+        if self._folded is None:
+            self._folded = np.bitwise_xor.reduce(self.chunks, axis=0)
+        return self._folded
+
+    def diff(self, other: "ChunkedDigest") -> np.ndarray:
+        """Indices of chunk rows that differ from ``other``'s."""
+        if (self.chunks.shape != other.chunks.shape
+                or self.chunk_words != other.chunk_words):
+            raise ValueError(
+                f"chunk layouts differ: {self.chunks.shape}x{self.chunk_words}"
+                f" vs {other.chunks.shape}x{other.chunk_words}")
+        return np.flatnonzero((self.chunks != other.chunks).any(axis=1))
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Work accounting for one :meth:`DigestCache.digests` pass."""
+    leaves: int = 0             # leaves examined
+    clean_leaves: int = 0       # identity-hits: zero dispatch
+    new_leaves: int = 0         # first sight / shape change: full dispatch
+    chunks: int = 0             # chunks covered by the examined leaves
+    dirty_chunks: int = 0       # chunks re-digested through the engine
+
+
+@dataclasses.dataclass
+class _Entry:
+    leaf: object                # last-seen jax leaf (identity tier); None
+                                # for host leaves — identity never trusts them
+    words: jnp.ndarray          # its word stream (the comparison baseline)
+    cd: ChunkedDigest
+
+
+class DigestCache:
+    """Tree-path-keyed digest cache: O(changed-chunks) re-verification.
+
+    ``digests(tree)`` returns the same per-leaf digests as
+    :func:`repro.core.verify.tree_digest` (bit-identical), dispatching the
+    engine only for chunks whose words changed since the previous call.
+    ``last`` holds the :class:`CacheStats` of the most recent pass.
+    """
+
+    def __init__(self, engine: _engine.CimEngine | None = None,
+                 chunk_words: int | None = None,
+                 digest_width: int = DIGEST_WIDTH, impl: str = "auto"):
+        self.engine = engine if engine is not None \
+            else _engine.CimEngine(impl=impl)
+        self.digest_width = digest_width
+        self.chunk_words = self.engine._chunk_words(chunk_words, digest_width)
+        self._entries: dict[str, _Entry] = {}
+        self.last = CacheStats()
+        self.last_leaf_dirty: dict[str, int] = {}
+        self.last_leaf_new: set[str] = set()
+        self.observed_since_save: dict[str, int] = {}
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def chunk_digests(self, key: str) -> ChunkedDigest | None:
+        """The cached digest matrix for one tree path (None if unseen)."""
+        entry = self._entries.get(key)
+        return entry.cd if entry else None
+
+    def drop(self, key: str) -> None:
+        self._entries.pop(key, None)
+        self.observed_since_save.pop(key, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.observed_since_save.clear()
+
+    # -- the incremental pass ------------------------------------------------
+
+    def digests(self, tree):
+        """Pytree -> same-structure pytree of (digest_width,) uint32 digests,
+        re-digesting only chunks whose digest row changed.
+
+        ``last_leaf_dirty`` afterwards maps each leaf key to the number of
+        chunks the word-compare tier *observed* changing in this pass (0
+        for identity hits, compare-clean leaves, and fresh entries); the
+        same counts accumulate into ``observed_since_save`` until
+        :meth:`mark_saved` clears them.  This is exact change evidence —
+        ``save_delta`` consults the accumulated map so a changed leaf is
+        stored even when its XOR-parity digest collides with the base's
+        (an even number of flips per digest column cancels), *including*
+        when the observing scrub pass happened earlier and the cache is
+        already synced by the time save_delta re-digests.
+        """
+        flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+        stats = CacheStats()
+        self.last_leaf_dirty = {}
+        self.last_leaf_new = set()
+        out = [self._leaf_digest(leaf_key(path), leaf, stats)
+               for path, leaf in flat]
+        self.last = stats
+        for k, v in self.last_leaf_dirty.items():
+            self.observed_since_save[k] = \
+                self.observed_since_save.get(k, 0) + v
+        return jax.tree_util.tree_unflatten(tdef, out)
+
+    def mark_saved(self) -> None:
+        """Forget the accumulated change evidence (``observed_since_save``)
+        — called by ``save_delta`` after it durably consumed it."""
+        self.observed_since_save.clear()
+
+    def _leaf_digest(self, key: str, leaf, stats: CacheStats) -> np.ndarray:
+        stats.leaves += 1
+        entry = self._entries.get(key)
+        if entry is not None and leaf is entry.leaf \
+                and isinstance(leaf, jax.Array):
+            # identity tier: jax arrays ONLY — they are immutable, so same
+            # object means same bytes.  Any numpy leaf falls through to the
+            # word-compare: writability flags can't be trusted (a read-only
+            # view still aliases a writable base that may have mutated).
+            stats.clean_leaves += 1
+            stats.chunks += entry.cd.n_chunks
+            return entry.cd.digest()
+
+        words = _leaf_words(leaf)
+        n = int(words.shape[0])
+        chunk = self.chunk_words
+        n_chunks = max(1, -(-n // chunk))
+        stats.chunks += n_chunks
+
+        if entry is None or entry.cd.nwords != n:
+            # unseen path or re-layout: nothing to delta against — recorded
+            # in last_leaf_new so consumers know no change/no-change claim
+            # can be made about this leaf (save_delta stores such leaves)
+            cd = ChunkedDigest.compute(words, self.engine, chunk,
+                                       self.digest_width)
+            stats.new_leaves += 1
+            stats.dirty_chunks += cd.n_chunks
+            self.last_leaf_new.add(key)
+        else:
+            dirty = _dirty_chunks(words, entry.words, chunk)
+            rows = entry.cd.chunks.copy()
+            # dispatch every dirty chunk before materializing any: jax
+            # dispatch is async, so the k digests overlap on device instead
+            # of k sequential dispatch-then-block round trips.
+            pending = [(i, self.engine.digest(
+                words[i * chunk:(i + 1) * chunk], self.digest_width))
+                for i in dirty]
+            for i, d in pending:
+                rows[i] = np.asarray(d)
+            stats.dirty_chunks += len(dirty)
+            self.last_leaf_dirty[key] = len(dirty)
+            cd = ChunkedDigest(rows, chunk, n, self.digest_width)
+
+        # retain the leaf object only when identity can ever be trusted
+        # (immutable jax arrays): pinning a numpy leaf would double the
+        # documented one-copy memory cost for nothing.
+        self._entries[key] = _Entry(
+            leaf if isinstance(leaf, jax.Array) else None, words, cd)
+        return cd.digest()
+
+
+def _leaf_words(leaf) -> jnp.ndarray:
+    """Byte-true uint32 word stream of any leaf.
+
+    Host (numpy/scalar) leaves go through :func:`repro.core.verify.np_words`
+    — the checkpoint layer's byte view, exact for 64-bit dtypes even when
+    jax x64 is off (``jnp.asarray`` would silently downcast them and the
+    cache's digests would disagree with the manifest's) — and are
+    unconditionally snapshotted (copied): the stored comparison baseline
+    must never alias host bytes that can mutate, and writability flags
+    can't prove a buffer won't (a read-only view still aliases its base).
+    jax arrays take the device view (:func:`repro.kernels.ops.as_words`);
+    64-bit jax arrays only exist with x64 enabled, which ``as_words``
+    handles.
+    """
+    if isinstance(leaf, jax.Array):
+        return ops.as_words(leaf)
+    words, _ = _verify.np_words(np.asarray(leaf))
+    return jnp.asarray(words.copy())
+
+
+def _dirty_chunks(new_words: jnp.ndarray, old_words: jnp.ndarray,
+                  chunk: int) -> np.ndarray:
+    """Chunk indices whose words differ — one fused elementwise compare (the
+    in-memory XOR+zero-test), no digest dispatch."""
+    n = new_words.shape[0]
+    eq = new_words == old_words
+    pad = (-n) % chunk
+    if pad:
+        eq = jnp.pad(eq, (0, pad), constant_values=True)
+    mask = jnp.logical_not(jnp.all(eq.reshape(-1, chunk), axis=1))
+    return np.flatnonzero(np.asarray(mask))

@@ -31,20 +31,70 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as _engine
+from repro.kernels import ops as _ops
 
 DIGEST_WIDTH = 128  # uint32 words = 512 bytes
 
 
+def leaf_key(path) -> str:
+    """Canonical string key ("a/b/0") for a tree_flatten_with_path entry.
+
+    The single definition shared by the checkpoint manifest
+    (:mod:`repro.checkpoint.ckpt`) and the incremental
+    :class:`repro.core.incremental.DigestCache` — both address leaves by
+    this key, and ``save_delta(cache=)`` relies on the two never
+    desynchronizing.
+    """
+    return "/".join(_path_entry_str(p) for p in path)
+
+
+def _path_entry_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
 def tree_digest(tree, impl: str = "auto",
                 engine: _engine.CimEngine | None = None,
-                chunk_words: int | None = None):
+                chunk_words: int | None = None, cache=None):
     """Pytree -> same-structure pytree of (DIGEST_WIDTH,) uint32 digests.
 
     ``engine`` may be a single-device :class:`~repro.core.engine.CimEngine`
     or a mesh-aware :class:`~repro.core.engine.ShardedCimEngine` — digests
     are bit-identical either way.  ``chunk_words`` bounds the per-dispatch
     footprint via :meth:`~repro.core.engine.CimEngine.digest_stream`.
+    ``cache`` (a :class:`repro.core.incremental.DigestCache`) makes repeated
+    scans incremental: only chunks that changed since the cache's previous
+    pass are re-digested through its engine — same digests, O(dirty-chunks)
+    dispatch (DESIGN.md §12).
     """
+    if cache is not None:
+        # the cache digests through its own engine/chunking/impl; different
+        # values here would be silently ignored — refuse.
+        if engine is not None and engine is not cache.engine:
+            raise ValueError("tree_digest: cache= and engine= conflict — "
+                             "the cache digests through cache.engine; pass "
+                             "the same engine (or neither)")
+        if impl != "auto" and impl != cache.engine.impl:
+            raise ValueError(
+                f"tree_digest: impl={impl!r} conflicts with the cache "
+                f"engine's impl={cache.engine.impl!r} — the cache digests "
+                "through its own engine")
+        if cache.digest_width != DIGEST_WIDTH:
+            raise ValueError(
+                f"tree_digest: cache digest_width={cache.digest_width} "
+                f"breaks the ({DIGEST_WIDTH},)-digest contract — build the "
+                "cache with the default width")
+        if chunk_words is not None and cache.engine._chunk_words(
+                chunk_words, cache.digest_width) != cache.chunk_words:
+            # align the caller's value the same way DigestCache did at
+            # construction, so passing the identical argument to both is OK
+            raise ValueError(
+                f"tree_digest: chunk_words={chunk_words} conflicts with the "
+                f"cache's chunk_words={cache.chunk_words}")
+        return cache.digests(tree)
     eng = engine if engine is not None else _engine.CimEngine(impl=impl)
     if chunk_words is None:
         fn = lambda x: eng.digest(x, DIGEST_WIDTH)
@@ -56,10 +106,25 @@ def tree_digest(tree, impl: str = "auto",
 
 def verify_trees(a, b, impl: str = "auto",
                  engine: _engine.CimEngine | None = None,
-                 chunk_words: int | None = None):
-    """Returns (all_ok: bool array, per-leaf ok pytree) comparing digests."""
-    da = tree_digest(a, impl, engine=engine, chunk_words=chunk_words)
-    db = tree_digest(b, impl, engine=engine, chunk_words=chunk_words)
+                 chunk_words: int | None = None,
+                 cache_a=None, cache_b=None):
+    """Returns (all_ok: bool array, per-leaf ok pytree) comparing digests.
+
+    ``cache_a``/``cache_b`` make the periodic source-vs-backup scrub
+    incremental: each tree keeps its own
+    :class:`~repro.core.incremental.DigestCache` (the caches retain leaf
+    references, so one cache must not track both trees).
+    """
+    if cache_a is not None and cache_a is cache_b:
+        # one cache thrashing between two trees re-digests every differing
+        # chunk on every scrub — correct results, but silently O(diff) forever
+        raise ValueError("verify_trees: cache_a and cache_b must be distinct "
+                         "DigestCaches — a shared cache thrashes between the "
+                         "two trees and defeats the incremental scan")
+    da = tree_digest(a, impl, engine=engine, chunk_words=chunk_words,
+                     cache=cache_a)
+    db = tree_digest(b, impl, engine=engine, chunk_words=chunk_words,
+                     cache=cache_b)
     leaf_ok = jax.tree.map(lambda x, y: jnp.all(x == y), da, db)
     return jnp.all(jnp.stack(jax.tree.leaves(leaf_ok))), leaf_ok
 
@@ -69,17 +134,13 @@ def np_words(arr: np.ndarray, align: int = 4):
     host-side digest/cipher shares, zero-padding the tail to ``align`` bytes.
 
     Returns ``(words, nbytes)`` — the uint32 view and the original byte
-    length.  This is the single definition of the host byte layout; the
-    device twins (:func:`np_digest_via_device`,
+    length.  Delegates to :func:`repro.kernels.ops.host_words`, the single
+    definition of the host byte layout; the device twins
+    (:func:`np_digest_via_device`,
     :func:`repro.core.encrypt.encrypt_np_via_device`) route the same words
     through the engine, which is what makes the two paths bit-compatible.
     """
-    raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-    nbytes = raw.size
-    pad = (-nbytes) % align
-    if pad:
-        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
-    return raw.view(np.uint32), nbytes
+    return _ops.host_words(arr, align)
 
 
 def np_digest(arr: np.ndarray, digest_width: int = DIGEST_WIDTH) -> np.ndarray:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import os
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -71,7 +72,11 @@ def xnor_matmul(pa: jnp.ndarray, pb: jnp.ndarray, valid_k: int,
     m, n = pa.shape[0], pb.shape[0]
     pa2, pb2 = _pad_rows(pa, bm), _pad_rows(pb, bn)
     kw = pa2.shape[1]
-    bk = min(bk, kw) if kw % min(bk, kw) == 0 else 1
+    # pad kw up to a multiple of bk rather than collapsing the tile to bk=1
+    # on non-divisible packed widths (e.g. kw=96 with bk=64): pad words are
+    # zero in both operands and the kpad-valid_k correction below removes
+    # their bias exactly, so the grid stays ceil(kw/bk) steps.
+    bk = min(bk, kw)
     pa2, pb2 = _pad_cols(pa2, bk), _pad_cols(pb2, bk)
     # pad words are 0 in both operands => popcount contribution 0; the
     # (kw_pad*32 - valid_k) correction below removes their +1 dot bias.
@@ -92,7 +97,10 @@ def binarize(x: jnp.ndarray, impl: str = "auto", bm: int = 256):
         alpha = jnp.mean(jnp.abs(x2[:, :k]), axis=-1).astype(jnp.float32)
     else:
         m = x2.shape[0]
-        bm = min(bm, m) if m % min(bm, m) == 0 else 1
+        # pad rows up to a multiple of bm rather than collapsing the tile to
+        # bm=1 on non-divisible row counts (the digest/stream_cipher fix):
+        # pad rows are garbage in planes/alpha and are sliced off below.
+        bm = min(bm, m)
         x3 = _pad_rows(x2, bm)
         planes, alpha = _pack.pack(x3, bm=bm, interpret=(impl == "interpret"))
         planes, alpha = planes[:m], alpha[:m]
@@ -185,8 +193,33 @@ def stream_cipher(buf: jnp.ndarray, key: jnp.ndarray, counter: int = 0,
     return out.reshape(-1)[:n].reshape(buf.shape)
 
 
+def host_words(arr: np.ndarray, align: int = 4):
+    """View a host numpy array's bytes as the canonical little-endian uint32
+    stream, zero-padding the tail to ``align`` bytes.
+
+    Returns ``(words, nbytes)``.  This is THE single definition of the host
+    byte layout: :func:`repro.core.verify.np_words` delegates here and
+    :func:`as_words` routes host inputs through it, so the digest/cipher
+    host and device paths can never desynchronize.
+    """
+    raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+    nbytes = raw.size
+    pad = (-nbytes) % align
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    return raw.view(np.uint32), nbytes
+
+
 def as_words(buf: jnp.ndarray) -> jnp.ndarray:
-    """Losslessly view any array as a flat uint32 stream (pads odd tails)."""
+    """Losslessly view any array as a flat uint32 stream (pads odd tails).
+
+    Host (numpy) inputs take the :func:`host_words` byte view BEFORE any
+    jax conversion: with x64 disabled ``jnp.asarray`` silently downcasts
+    float64/int64 and the stream would drop half of every element's bytes.
+    jax arrays bitcast on device (64-bit ones only exist with x64 on).
+    """
+    if not isinstance(buf, jax.Array):
+        return jnp.asarray(host_words(np.asarray(buf))[0])
     flat = buf.reshape(-1)
     size = jnp.dtype(flat.dtype).itemsize
     if flat.dtype == jnp.uint32:

@@ -33,19 +33,22 @@ def main() -> int:
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_params(cfg, key)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    # independent streams for init / prompt / ctx / sampling: reusing one key
+    # correlates the generated tokens with the weight init.
+    init_key, prompt_key, ctx_key, sample_key = jax.random.split(
+        jax.random.PRNGKey(args.seed), 4)
+    params = lm.init_params(cfg, init_key)
+    prompt = jax.random.randint(prompt_key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab)
     ctx = None
     if cfg.n_ctx_tokens:
-        ctx = jax.random.normal(key, (args.batch, cfg.n_ctx_tokens,
-                                      cfg.d_model), jnp.float32) * 0.1
+        ctx = jax.random.normal(ctx_key, (args.batch, cfg.n_ctx_tokens,
+                                          cfg.d_model), jnp.float32) * 0.1
 
     t0 = time.time()
     out = serve_step.generate(cfg, params, prompt, args.new_tokens, ctx=ctx,
                               temperature=args.temperature,
-                              key=key if args.temperature > 0 else None)
+                              key=sample_key if args.temperature > 0 else None)
     dt = time.time() - t0
     toks = args.batch * args.new_tokens
     print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "

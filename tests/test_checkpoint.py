@@ -156,6 +156,310 @@ def test_device_side_ckpt_path_is_bit_identical_to_host(tmp_path, tree,
     assert ok, bad
 
 
+# ---------------------------------------------------------------------------
+# delta checkpoints (DESIGN.md §12): base+delta chains restore byte-identical
+# to an equivalent full checkpoint, encrypted and plain, host and engine paths
+# ---------------------------------------------------------------------------
+
+def _engine(kind):
+    if kind == "none":
+        return None
+    from repro.core.engine import CimEngine, ShardedCimEngine
+    from repro.launch.mesh import make_engine_mesh
+    if kind == "sharded":
+        return ShardedCimEngine(make_engine_mesh(), impl="ref")
+    return CimEngine(impl="ref")
+
+
+def _step_trees(tree):
+    """Three tree versions: base, one leaf changed, another leaf changed."""
+    t2 = dict(tree, w=tree["w"] + 1)
+    t3 = dict(t2, inner={"b": t2["inner"]["b"] * 2,
+                         "steps": t2["inner"]["steps"]})
+    return tree, t2, t3
+
+
+@pytest.mark.parametrize("root_key", [None, "hunter2"])
+@pytest.mark.parametrize("kind", ["none", "single", "sharded"])
+def test_delta_chain_restore_matches_full(tmp_path, tree, root_key, kind):
+    """Restoring base+delta+delta == restoring an equivalent full checkpoint,
+    byte for byte — the acceptance criterion of the delta subsystem."""
+    eng = _engine(kind)
+    t1, t2, t3 = _step_trees(tree)
+    ckpt.save(str(tmp_path / "chain"), 1, t1, root_key=root_key, engine=eng)
+    ckpt.save_delta(str(tmp_path / "chain"), 2, t2, root_key=root_key,
+                    engine=eng)
+    ckpt.save_delta(str(tmp_path / "chain"), 3, t3, root_key=root_key,
+                    engine=eng)
+    ckpt.save(str(tmp_path / "full"), 3, t3, root_key=root_key)
+
+    out_c, step = ckpt.restore(str(tmp_path / "chain"), None, _like(tree),
+                               root_key=root_key, engine=eng)
+    out_f, _ = ckpt.restore(str(tmp_path / "full"), 3, _like(tree),
+                            root_key=root_key)
+    assert step == 3
+    for key in ("w",):
+        assert out_c[key].tobytes() == out_f[key].tobytes()
+    for key in ("b", "steps"):
+        assert out_c["inner"][key].tobytes() == out_f["inner"][key].tobytes()
+    ok, bad = ckpt.check(str(tmp_path / "chain"), 3, root_key=root_key,
+                         engine=eng)
+    assert ok, bad
+
+
+def test_delta_npz_stores_only_moved_leaves(tmp_path, tree):
+    t1, t2, t3 = _step_trees(tree)
+    ckpt.save(str(tmp_path), 1, t1)
+    m2 = ckpt.save_delta(str(tmp_path), 2, t2)
+    assert set(np.load(str(tmp_path / "ckpt_00000002.npz")).files) == {"w"}
+    assert m2["base_step"] == 1
+    assert m2["leaves"]["w"]["stored_in"] == 2
+    assert m2["leaves"]["inner/b"]["stored_in"] == 1
+    m3 = ckpt.save_delta(str(tmp_path), 3, t3)      # chains onto the delta
+    assert set(np.load(str(tmp_path / "ckpt_00000003.npz")).files) == \
+        {"inner__b"}
+    assert m3["base_step"] == 2
+    assert m3["leaves"]["w"]["stored_in"] == 2       # one-hop resolution
+    assert m3["leaves"]["inner/steps"]["stored_in"] == 1
+
+
+def test_delta_write_verify_rechecks_only_written_leaves(tmp_path, tree):
+    """Corrupt a base-stored leaf on disk between base and delta: the delta's
+    write-verify (only-written leaves) must still pass, while a full chain
+    check flags the corruption."""
+    t1, t2, _ = _step_trees(tree)
+    ckpt.save(str(tmp_path), 1, t1)
+    path = str(tmp_path / "ckpt_00000001.npz")
+    data = dict(np.load(path))
+    tampered = data["inner__b"].copy()
+    tampered.view(np.uint16)[0] ^= 1
+    data["inner__b"] = tampered
+    with open(path, "wb") as f:
+        np.savez(f, **data)
+    ckpt.save_delta(str(tmp_path), 2, t2)            # verify_write=True: OK
+    ok, bad = ckpt.check(str(tmp_path), 2)           # full chain check: not OK
+    assert not ok and bad == ["inner/b"]
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 2, _like(tree))
+
+
+def test_delta_pad_keying_is_reuse_free(tmp_path, tree):
+    """A leaf re-written at a later delta step with the SAME plaintext must
+    produce different ciphertext (pad keyed by the write step)."""
+    t1 = tree
+    t2 = dict(tree, w=tree["w"] + 1)
+    t3 = dict(tree, w=t1["w"])                       # w back to its t1 value
+    ckpt.save(str(tmp_path), 1, t1, root_key="k")
+    ckpt.save_delta(str(tmp_path), 2, t2, root_key="k")
+    m3 = ckpt.save_delta(str(tmp_path), 3, t3, root_key="k")
+    assert m3["leaves"]["w"]["stored_in"] == 3       # digest moved vs step 2
+    c1 = np.load(str(tmp_path / "ckpt_00000001.npz"))["w"]
+    c3 = np.load(str(tmp_path / "ckpt_00000003.npz"))["w"]
+    assert not np.array_equal(c1, c3)                # fresh pad, same bytes in
+    out, _ = ckpt.restore(str(tmp_path), 3, _like(tree), root_key="k")
+    assert np.array_equal(out["w"], t1["w"])
+
+
+def test_delta_with_digest_cache_matches_cacheless(tmp_path, tree):
+    """save_delta(cache=) must write the same manifest/payload as the
+    cacheless scan while dispatching only dirty chunks."""
+    from repro.core.engine import CimEngine
+    from repro.core.incremental import DigestCache
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=128)
+    t1, t2, _ = _step_trees(tree)
+    ckpt.save(str(tmp_path / "a"), 1, t1, root_key="k", engine=eng)
+    cache.digests(t1)                                # prime on the base tree
+    m_cached = ckpt.save_delta(str(tmp_path / "a"), 2, t2, root_key="k",
+                               engine=eng, cache=cache)
+    assert cache.last.dirty_chunks == 4              # only w's chunks, 512/128
+    ckpt.save(str(tmp_path / "b"), 1, t1, root_key="k")
+    m_plain = ckpt.save_delta(str(tmp_path / "b"), 2, t2, root_key="k")
+    assert m_cached == m_plain
+    out, _ = ckpt.restore(str(tmp_path / "a"), 2, _like(tree), root_key="k")
+    assert np.array_equal(out["w"], t2["w"])
+    with pytest.raises(ValueError, match="conflict"):   # foreign engine=
+        ckpt.save_delta(str(tmp_path / "a"), 3, t2, root_key="k",
+                        engine=CimEngine(impl="ref"), cache=cache)
+    with pytest.raises(ValueError, match="digest_width"):  # manifest width
+        ckpt.save_delta(str(tmp_path / "a"), 3, t2, root_key="k",
+                        cache=DigestCache(engine=eng, digest_width=96))
+
+
+def test_delta_with_cache_handles_float64_leaves(tmp_path):
+    """save_delta(cache=) on a float64 leaf must stay restorable: the cache
+    digest must cover the true 8-byte words, not an x64-off downcast."""
+    from repro.core.engine import CimEngine
+    from repro.core.incremental import DigestCache
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=128)
+    t1 = {"d": np.arange(64, dtype=np.float64),
+          "f": np.ones(8, dtype=np.float32)}
+    ckpt.save(str(tmp_path), 1, t1)
+    cache.digests(t1)
+    t2 = {"d": t1["d"] + 1.0, "f": t1["f"]}
+    ckpt.save_delta(str(tmp_path), 2, t2, cache=cache)   # verify_write=True
+    out, _ = ckpt.restore(str(tmp_path), 2, _like(t2))
+    assert out["d"].dtype == np.float64
+    assert out["d"].tobytes() == t2["d"].tobytes()
+
+
+def test_delta_with_cache_stores_parity_colliding_changes(tmp_path):
+    """Swapping two 512-byte-aligned blocks cancels in the columnwise XOR
+    parity, so the digest can't see it — the cache's exact word-compare
+    must force the store anyway (cacheless scans are documented to miss
+    this)."""
+    from repro.core.engine import CimEngine
+    from repro.core.incremental import DigestCache
+    w = np.arange(512, dtype=np.float32)
+    w2 = w.copy()
+    w2[0:128], w2[128:256] = w[128:256].copy(), w[0:128].copy()
+    assert np.array_equal(verify.np_digest(w), verify.np_digest(w2))  # collides
+    t1, t2 = {"w": w}, {"w": w2}
+    cache = DigestCache(engine=CimEngine(impl="ref"), chunk_words=128)
+    ckpt.save(str(tmp_path), 1, t1)
+    cache.digests(t1)
+    m = ckpt.save_delta(str(tmp_path), 2, t2, cache=cache)
+    assert m["leaves"]["w"]["stored_in"] == 2        # stored despite collision
+    out, _ = ckpt.restore(str(tmp_path), 2, _like(t2), verify_read=False)
+    assert out["w"].tobytes() == w2.tobytes()
+
+    # the README flow: a scrub pass syncs the cache BEFORE save_delta, whose
+    # internal pass then sees everything clean — the evidence must persist
+    # across passes (observed_since_save) until a save consumes it
+    w3 = w2.copy()
+    w3[0:128], w3[256:384] = w2[256:384].copy(), w2[0:128].copy()  # collides
+    assert np.array_equal(verify.np_digest(w2), verify.np_digest(w3))
+    t3 = {"w": w3}
+    verify.tree_digest(t3, cache=cache)              # observing scrub pass
+    m = ckpt.save_delta(str(tmp_path), 3, t3, cache=cache)
+    assert m["leaves"]["w"]["stored_in"] == 3
+    out, _ = ckpt.restore(str(tmp_path), 3, _like(t3), verify_read=False)
+    assert out["w"].tobytes() == w3.tobytes()
+    # evidence was consumed by the successful save: an unchanged re-delta
+    # goes back to storing nothing
+    m = ckpt.save_delta(str(tmp_path), 4, t3, cache=cache)
+    assert m["leaves"]["w"]["stored_in"] == 3
+
+    # an UNPRIMED cache has no comparison history: it cannot attest any
+    # leaf clean, so a colliding change is still stored (conservative full
+    # write instead of silently trusting the collidable digest)
+    fresh = DigestCache(engine=CimEngine(impl="ref"), chunk_words=128)
+    w4 = w3.copy()
+    w4[0:128], w4[128:256] = w3[128:256].copy(), w3[0:128].copy()
+    assert np.array_equal(verify.np_digest(w3), verify.np_digest(w4))
+    m = ckpt.save_delta(str(tmp_path), 5, {"w": w4}, cache=fresh)
+    assert m["leaves"]["w"]["stored_in"] == 5
+    out, _ = ckpt.restore(str(tmp_path), 5, _like(t3), verify_read=False)
+    assert out["w"].tobytes() == w4.tobytes()
+
+
+def test_delta_requires_base_and_uniform_encryption(tmp_path, tree):
+    with pytest.raises(FileNotFoundError, match="base"):
+        ckpt.save_delta(str(tmp_path), 2, tree)
+    ckpt.save(str(tmp_path), 1, tree)                # plain base
+    with pytest.raises(ValueError, match="encrypt"):
+        ckpt.save_delta(str(tmp_path), 2, tree, root_key="k")
+    ckpt.save(str(tmp_path), 3, tree, root_key="k")  # encrypted base
+    with pytest.raises(ValueError, match="encrypt"):
+        ckpt.save_delta(str(tmp_path), 4, tree)
+
+
+def test_delta_refuses_to_clobber_its_base(tmp_path, tree):
+    """step <= base_step would os.replace the npz the chain still points at
+    (silent data loss) — must be a clear error, not a corrupted chain."""
+    ckpt.save(str(tmp_path), 5, tree)
+    with pytest.raises(ValueError, match="greater than its base"):
+        ckpt.save_delta(str(tmp_path), 5, tree)      # default base = latest
+    with pytest.raises(ValueError, match="greater than its base"):
+        ckpt.save_delta(str(tmp_path), 4, tree, base_step=5)
+
+
+def test_delta_restores_dtype_reinterpretation_with_identical_bytes(tmp_path,
+                                                                    tree):
+    """Same bytes, new dtype: the byte digest doesn't move, but the leaf must
+    still be re-stored or plain restore would value-cast the base's floats."""
+    t2 = dict(tree, w=tree["w"].view(np.int32))      # bitwise identical
+    ckpt.save(str(tmp_path), 1, tree)
+    m = ckpt.save_delta(str(tmp_path), 2, t2)
+    assert m["leaves"]["w"]["stored_in"] == 2
+    out, _ = ckpt.restore(str(tmp_path), 2, _like(t2))
+    assert out["w"].dtype == np.int32
+    assert out["w"].tobytes() == tree["w"].tobytes()
+
+
+def test_failed_write_verify_unpublishes_the_step(tmp_path, tree,
+                                                  monkeypatch):
+    """A delta whose write-verify fails must not stay on disk: a published
+    bad step would become the next delta's default base and its manifest
+    records the intended digests, hiding the corruption forever."""
+    ckpt.save(str(tmp_path), 1, tree)
+    real = ckpt._write_payload
+
+    def corrupting(path, flat, stage):
+        digs = real(path, flat, stage)
+        data = dict(np.load(path))
+        bad = data["w"].copy()
+        bad.view(np.uint32)[0] ^= 1
+        data["w"] = bad
+        with open(path, "wb") as f:
+            np.savez(f, **data)
+        return digs
+
+    monkeypatch.setattr(ckpt, "_write_payload", corrupting)
+    t2 = dict(tree, w=tree["w"] + 1)
+    with pytest.raises(IOError, match="unpublished"):
+        ckpt.save_delta(str(tmp_path), 2, t2)
+    monkeypatch.undo()
+    assert ckpt.latest_step(str(tmp_path)) == 1       # bad step is gone
+    assert not os.path.exists(str(tmp_path / "manifest_00000002.msgpack"))
+    ckpt.save_delta(str(tmp_path), 2, t2)             # chain still healthy
+    out, _ = ckpt.restore(str(tmp_path), 2, _like(tree))
+    assert np.array_equal(out["w"], t2["w"])
+
+
+def test_writers_refuse_to_clobber_a_chained_base(tmp_path, tree):
+    """Overwriting a step a newer delta's stored_in points at would destroy
+    the chain's only copy of its clean leaves — both writers must refuse."""
+    t1, t2, t3 = _step_trees(tree)
+    ckpt.save(str(tmp_path), 1, t1)
+    ckpt.save_delta(str(tmp_path), 2, t2)             # w stored_in=2
+    ckpt.save_delta(str(tmp_path), 3, t3)             # still references 1, 2
+    with pytest.raises(ValueError, match="chain"):
+        ckpt.save(str(tmp_path), 1, t1)               # full save over base
+    with pytest.raises(ValueError, match="chain"):
+        ckpt.save_delta(str(tmp_path), 2, t2, base_step=1)  # delta over base
+    # the chain head itself is referenced by nothing: overwriting is fine
+    ckpt.save(str(tmp_path), 3, t3)
+    out, _ = ckpt.restore(str(tmp_path), 3, _like(tree))
+    assert np.array_equal(out["w"], t3["w"])
+
+
+def test_orphan_npz_without_manifest_is_not_a_published_step(tmp_path, tree):
+    """Crash window: an npz whose manifest never landed (killed during
+    write-verify) must be invisible to latest_step — restore(None) and the
+    next delta's default base use the last intact step instead of wedging."""
+    ckpt.save(str(tmp_path), 1, tree)
+    with open(str(tmp_path / "ckpt_00000002.npz"), "wb") as f:
+        f.write(b"partial")                           # orphan, no manifest
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    out, step = ckpt.restore(str(tmp_path), None, _like(tree))
+    assert step == 1 and np.array_equal(out["w"], tree["w"])
+    t2 = dict(tree, w=tree["w"] + 1)
+    ckpt.save_delta(str(tmp_path), 3, t2)             # base defaults to 1
+    out, _ = ckpt.restore(str(tmp_path), 3, _like(tree))
+    assert np.array_equal(out["w"], t2["w"])
+
+
+def test_delta_pruned_base_is_a_clear_error(tmp_path, tree):
+    t1, t2, _ = _step_trees(tree)
+    ckpt.save(str(tmp_path), 1, t1)
+    ckpt.save_delta(str(tmp_path), 2, t2)
+    os.remove(str(tmp_path / "ckpt_00000001.npz"))
+    with pytest.raises(FileNotFoundError, match="stored in step 1"):
+        ckpt.restore(str(tmp_path), 2, _like(tree))
+
+
 def test_np_digest_matches_device_digest():
     x = RNG.standard_normal((257,)).astype(np.float32)
     import jax.numpy as jnp

@@ -154,6 +154,45 @@ def test_engine_verify_copy_flags_corruption():
     assert not bool(eng.verify_copy(buf, buf.at[123].set(buf[123] ^ 1)))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16, jnp.int8,
+                                   jnp.float64])
+def test_verify_copy_accepts_non_uint32_buffers(dtype):
+    """Non-uint32 operands route through as_words instead of crashing in the
+    uint32-only bulk_op."""
+    if dtype == jnp.float64 and not jax.config.jax_enable_x64:
+        dtype = jnp.int32
+    eng = CimEngine(impl="ref")
+    x = jnp.asarray(RNG.standard_normal((33, 5))).astype(dtype)
+    assert bool(eng.verify_copy(x, jnp.array(x)))
+    y = x.at[32, 4].set(x[32, 4] + 1)
+    assert not bool(eng.verify_copy(x, y))
+
+
+def test_verify_copy_is_byte_true_for_64bit_numpy():
+    """A corruption living only in the upper bytes of an int64/float64 numpy
+    buffer must be caught — an x64-off downcast would discard it and report
+    the copy intact."""
+    eng = CimEngine(impl="ref")
+    a = np.arange(64, dtype=np.int64)
+    bad = a.copy()
+    bad[3] ^= np.int64(1) << 40              # flips bits the downcast drops
+    assert bool(eng.verify_copy(a, a.copy()))
+    assert not bool(eng.verify_copy(a, bad))
+    d = np.linspace(0.0, 1.0, 64, dtype=np.float64)
+    bad_d = d.copy()
+    bad_d.view(np.uint64)[5] ^= np.uint64(1)  # lowest mantissa bit
+    assert not bool(eng.verify_copy(d, bad_d))
+
+
+def test_verify_copy_rejects_mismatch_with_clear_error():
+    eng = CimEngine(impl="ref")
+    x = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="shape/dtype"):
+        eng.verify_copy(x, x.reshape(8, 4))   # same bytes, different layout
+    with pytest.raises(ValueError, match="shape/dtype"):
+        eng.verify_copy(x, x.astype(jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # cycle accounting
 # ---------------------------------------------------------------------------
@@ -175,6 +214,24 @@ def test_engine_stats_accumulate():
     eng.simulate(jnp.zeros((6, 32)), jnp.zeros((6, 32)))
     assert eng.stats.calls == 2
     assert eng.stats.cycles == eng.cycles_for(64 * 32) + 3  # 6 pairs / 2 banks
+
+
+def test_engine_stats_break_down_by_op_and_snapshot():
+    eng = CimEngine(BankGeometry(banks=2, rows=8, cols=32), impl="ref")
+    a = jnp.asarray(RNG.integers(0, 2**32, 64, dtype=np.uint32))
+    eng.xor(a, a)
+    eng.digest(a)
+    eng.digest(a)
+    eng.stream_cipher(a, jnp.array([1, 2], dtype=jnp.uint32))
+    per = eng.cycles_for(64 * 32)
+    assert eng.stats.by_op["xor"] == [per, 64 * 32, 1]
+    assert eng.stats.by_op["digest"] == [2 * per, 2 * 64 * 32, 2]
+    assert eng.stats.by_op["cipher"][2] == 1
+    snap = eng.stats.snapshot()
+    eng.digest(a)
+    assert eng.stats.cycles - snap.cycles == per
+    assert eng.stats.by_op["digest"][2] - snap.by_op["digest"][2] == 1
+    assert snap.by_op["digest"][2] == 2       # snapshot deep-copied by_op
 
 
 @pytest.mark.parametrize("method", ["xor", "digest", "cipher", "simulate"])

@@ -1,0 +1,352 @@
+"""Incremental verification (DESIGN.md §12): the ChunkedDigest fold
+invariant, the engine's chunk-level digest export, and the DigestCache's
+O(dirty-chunks) dispatch contract — asserted via EngineStats cycle counts,
+the acceptance criterion of the subsystem — on both engine classes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import verify
+from repro.core.engine import BankGeometry, CimEngine, ShardedCimEngine
+from repro.core.incremental import ChunkedDigest, DigestCache
+from repro.kernels import ops
+from repro.launch import mesh as mesh_mod
+
+RNG = np.random.default_rng(0)
+
+CHUNK = 256  # words per chunk (multiple of DIGEST_WIDTH)
+
+
+def _engine(kind: str) -> CimEngine:
+    if kind == "sharded":
+        return ShardedCimEngine(mesh_mod.make_engine_mesh(), impl="ref")
+    return CimEngine(impl="ref")
+
+
+def _words(n: int) -> jnp.ndarray:
+    return jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+
+
+def _flip_chunk(buf: jnp.ndarray, i: int, chunk: int = CHUNK) -> jnp.ndarray:
+    """New buffer differing from ``buf`` in exactly chunk i (one bit)."""
+    pos = min(i * chunk, buf.shape[0] - 1)
+    return buf.at[pos].set(buf[pos] ^ jnp.uint32(1))
+
+
+# ---------------------------------------------------------------------------
+# ChunkedDigest: the fold invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunk,width", [(5000, 512, 128), (1, 256, 128),
+                                           (4096, 4096, 128), (777, 384, 96),
+                                           (100001, 1024, 128)])
+def test_chunked_digest_fold_equals_one_shot(n, chunk, width):
+    eng = CimEngine(impl="ref")
+    buf = _words(n)
+    cd = ChunkedDigest.compute(buf, eng, chunk_words=chunk, digest_width=width)
+    assert cd.chunks.shape == (max(1, -(-n // chunk)), width)
+    assert cd.nwords == n
+    assert np.array_equal(cd.digest(),
+                          np.asarray(ops.digest(buf, width, impl="ref")))
+
+
+def test_chunked_digest_rows_match_slice_digests():
+    eng = CimEngine(impl="ref")
+    buf = _words(1000)
+    cd = ChunkedDigest.compute(buf, eng, chunk_words=CHUNK)
+    for i in range(cd.n_chunks):
+        want = ops.digest(buf[i * CHUNK:(i + 1) * CHUNK], impl="ref")
+        assert np.array_equal(cd.chunks[i], np.asarray(want)), i
+
+
+def test_chunked_digest_diff_localizes_corruption():
+    eng = CimEngine(impl="ref")
+    buf = _words(4 * CHUNK)
+    cd0 = ChunkedDigest.compute(buf, eng, chunk_words=CHUNK)
+    cd1 = ChunkedDigest.compute(_flip_chunk(buf, 2), eng, chunk_words=CHUNK)
+    assert np.array_equal(cd0.diff(cd1), [2])
+    with pytest.raises(ValueError, match="chunk layouts"):
+        cd0.diff(ChunkedDigest.compute(buf, eng, chunk_words=2 * CHUNK))
+
+
+@pytest.mark.parametrize("kind", ["single", "sharded"])
+def test_digest_chunks_engine_export(kind):
+    """The engine-level export used by ChunkedDigest.compute: per-row equals
+    the per-slice digest, on both engine classes."""
+    eng = _engine(kind)
+    buf = _words(3 * CHUNK + 17)
+    rows = np.asarray(eng.digest_chunks(buf, CHUNK))
+    assert rows.shape == (4, verify.DIGEST_WIDTH)
+    single = CimEngine(impl="ref")
+    for i in range(4):
+        want = single.digest(buf[i * CHUNK:(i + 1) * CHUNK])
+        assert np.array_equal(rows[i], np.asarray(want)), i
+
+
+# ---------------------------------------------------------------------------
+# DigestCache: digests bit-identical to the full scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["single", "sharded"])
+def test_cache_digests_match_tree_digest(kind):
+    tree = {"w": jnp.asarray(RNG.standard_normal((64, 33)), jnp.float32),
+            "u": _words(1000),
+            "inner": {"b": jnp.asarray(RNG.standard_normal(129),
+                                       jnp.float32)}}
+    cache = DigestCache(engine=_engine(kind), chunk_words=CHUNK)
+    got = verify.tree_digest(tree, cache=cache)
+    want = verify.tree_digest(tree, impl="ref")
+    for k in ("w", "u"):
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), k
+    assert np.array_equal(np.asarray(got["inner"]["b"]),
+                          np.asarray(want["inner"]["b"]))
+    assert cache.last.new_leaves == 3 and len(cache) == 3
+
+
+# ---------------------------------------------------------------------------
+# the dispatch contract: O(dirty-chunks) engine cycles (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["single", "sharded"])
+def test_clean_reverify_dispatches_nothing(kind):
+    eng = _engine(kind)
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    tree = {"a": _words(10 * CHUNK), "b": _words(3 * CHUNK + 5)}
+    d0 = cache.digests(tree)
+    snap = eng.stats.snapshot()
+    d1 = cache.digests(tree)            # same leaf objects: identity hits
+    assert eng.stats.cycles == snap.cycles
+    assert eng.stats.calls == snap.calls
+    assert cache.last.dirty_chunks == 0
+    assert cache.last.clean_leaves == 2
+    for k in tree:
+        assert np.array_equal(d0[k], d1[k])
+
+
+@pytest.mark.parametrize("kind", ["single", "sharded"])
+@pytest.mark.parametrize("dirty", [[0], [3], [0, 7, 9], [2, 3, 4]])
+def test_dirty_chunks_dispatch_exactly_those_chunks(kind, dirty):
+    """k dirty chunks -> exactly k digest dispatches of one chunk each,
+    cycle-counted as k * cycles_for(chunk bits) — not O(tree)."""
+    eng = _engine(kind)
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    n_chunks = 10
+    tree = {"a": _words(n_chunks * CHUNK)}
+    cache.digests(tree)
+
+    buf = tree["a"]
+    for i in dirty:
+        buf = _flip_chunk(buf, i)
+    snap = eng.stats.snapshot()
+    got = cache.digests({"a": buf})
+
+    k = len(dirty)
+    assert cache.last.dirty_chunks == k
+    assert cache.last.chunks == n_chunks
+    per_chunk = eng.cycles_for(CHUNK * 32)
+    assert eng.stats.cycles - snap.cycles == k * per_chunk
+    assert eng.stats.by_op["digest"][2] - snap.by_op["digest"][2] == k
+    # and the incrementally-updated digest is still the true digest
+    assert np.array_equal(got["a"],
+                          np.asarray(ops.digest(buf, impl="ref")))
+
+
+def test_dirty_chunk_count_property():
+    """Property sweep: for random buffers/dirty sets, the cache re-digests
+    exactly the dirty chunks and stays bit-identical to a fresh scan."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        n_chunks = int(rng.integers(2, 12))
+        tail = int(rng.integers(1, CHUNK))
+        n = (n_chunks - 1) * CHUNK + tail
+        eng = CimEngine(impl="ref")
+        cache = DigestCache(engine=eng, chunk_words=CHUNK)
+        buf = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+        cache.digests({"x": buf})
+
+        k = int(rng.integers(0, n_chunks + 1))
+        dirty = sorted(rng.choice(n_chunks, size=k, replace=False).tolist())
+        new = buf
+        for i in dirty:
+            pos = int(rng.integers(i * CHUNK, min((i + 1) * CHUNK, n)))
+            new = new.at[pos].set(new[pos] ^ jnp.uint32(1))
+        snap = eng.stats.snapshot()
+        got = cache.digests({"x": new})
+        assert cache.last.dirty_chunks == k, (seed, dirty)
+        want = sum(eng.cycles_for(32 * (min((i + 1) * CHUNK, n) - i * CHUNK))
+                   for i in dirty)
+        assert eng.stats.cycles - snap.cycles == want, (seed, dirty)
+        assert np.array_equal(got["x"], np.asarray(ops.digest(new,
+                                                              impl="ref")))
+
+
+def test_shape_change_triggers_full_recompute():
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    cache.digests({"x": _words(4 * CHUNK)})
+    buf2 = _words(6 * CHUNK)
+    got = cache.digests({"x": buf2})
+    assert cache.last.new_leaves == 1
+    assert cache.last.dirty_chunks == 6
+    assert np.array_equal(got["x"], np.asarray(ops.digest(buf2, impl="ref")))
+
+
+def test_cache_handles_float_leaves_and_scalars():
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    tree = {"w": jnp.asarray(RNG.standard_normal((65, 31)), jnp.float32),
+            "s": jnp.uint32(7)}
+    got = cache.digests(tree)
+    want = verify.tree_digest(tree, impl="ref")
+    assert np.array_equal(got["w"], np.asarray(want["w"]))
+    assert np.array_equal(got["s"], np.asarray(want["s"]))
+    # perturb one element: exactly that chunk re-digests
+    w2 = tree["w"].at[64, 30].set(0.0)
+    snap = eng.stats.snapshot()
+    got2 = cache.digests({"w": w2, "s": tree["s"]})
+    assert cache.last.dirty_chunks == 1
+    assert eng.stats.calls - snap.calls == 1
+    assert np.array_equal(got2["w"],
+                          np.asarray(verify.tree_digest({"w": w2},
+                                                        impl="ref")["w"]))
+
+
+def test_inplace_numpy_mutation_is_detected():
+    """numpy leaves must never take the identity fast path: an in-place
+    update under the same object identity is still found by the word-compare
+    tier — including through a read-only view whose writable base mutates
+    (writability flags prove nothing).  jax arrays are immutable and keep
+    the fast path."""
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    w = np.arange(2 * CHUNK, dtype=np.uint32)
+    cache.digests({"w": w})
+    w[0] ^= 1                              # same object, new bytes
+    got = cache.digests({"w": w})
+    assert cache.last.clean_leaves == 0
+    assert cache.last.dirty_chunks == 1
+    assert np.array_equal(
+        got["w"], np.asarray(ops.digest(jnp.asarray(w), impl="ref")))
+
+    base = np.arange(2 * CHUNK, dtype=np.uint32)
+    frozen = base.view()
+    frozen.flags.writeable = False         # read-only view, writable base
+    cache.digests({"v": frozen})
+    base[CHUNK] ^= 1                       # mutate THROUGH the base
+    got = cache.digests({"v": frozen})
+    assert cache.last.dirty_chunks == 1
+    assert np.array_equal(got["v"], verify.np_digest(np.asarray(frozen)))
+
+
+def test_cache_is_byte_true_for_64bit_numpy_leaves():
+    """float64/int64 numpy leaves must digest their true bytes — jnp.asarray
+    would silently downcast them with x64 off and the cache's digests would
+    disagree with the checkpoint manifest's np_digest."""
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    tree = {"d": np.arange(300, dtype=np.float64) * 0.5,
+            "i": np.arange(100, dtype=np.int64)}
+    got = cache.digests(tree)
+    uncached = verify.tree_digest(tree, impl="ref")
+    for k in tree:
+        assert np.array_equal(got[k], verify.np_digest(tree[k])), k
+        # and the UNCACHED engine scan agrees (as_words host byte view)
+        assert np.array_equal(got[k], np.asarray(uncached[k])), k
+    # in-place 64-bit update: found, and still byte-true
+    tree["d"][7] = -1.0
+    got = cache.digests(tree)
+    assert cache.last.dirty_chunks == 1
+    assert np.array_equal(got["d"], verify.np_digest(tree["d"]))
+
+
+def test_cache_does_not_pin_host_leaves():
+    """_Entry must not retain numpy leaf objects (identity never trusts
+    them): memory cost stays at the documented one snapshot copy."""
+    cache = DigestCache(engine=CimEngine(impl="ref"), chunk_words=CHUNK)
+    w = np.arange(CHUNK, dtype=np.uint32)
+    j = _words(CHUNK)
+    cache.digests({"w": w, "j": j})
+    assert cache._entries["w"].leaf is None
+    assert cache._entries["j"].leaf is j
+    # per-leaf change evidence: exact counts per pass
+    w[3] ^= 1
+    cache.digests({"w": w, "j": j})
+    assert cache.last_leaf_dirty == {"w": 1}
+
+
+def test_cache_bookkeeping():
+    cache = DigestCache(engine=CimEngine(impl="ref"), chunk_words=CHUNK)
+    cache.digests({"x": _words(2 * CHUNK)})
+    cd = cache.chunk_digests("x")
+    assert cd is not None and cd.n_chunks == 2
+    assert cache.chunk_digests("y") is None
+    cache.drop("x")
+    assert len(cache) == 0
+    cache.digests({"x": _words(CHUNK)})
+    cache.clear()
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# the scrub workload: verify_trees with per-tree caches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["single", "sharded"])
+def test_incremental_scrub_detects_backup_divergence(kind):
+    eng = _engine(kind)
+    src = {"a": _words(8 * CHUNK), "b": _words(3 * CHUNK)}
+    bak = {k: jnp.array(v) for k, v in src.items()}   # the backup copy
+    ca, cb = (DigestCache(engine=eng, chunk_words=CHUNK) for _ in range(2))
+    ok, _ = verify.verify_trees(src, bak, cache_a=ca, cache_b=cb)
+    assert bool(ok)
+    snap = eng.stats.snapshot()
+    ok, _ = verify.verify_trees(src, bak, cache_a=ca, cache_b=cb)
+    assert bool(ok) and eng.stats.cycles == snap.cycles   # clean re-scrub
+
+    src2 = {"a": _flip_chunk(src["a"], 5), "b": src["b"]}  # source moved on
+    snap = eng.stats.snapshot()
+    ok, leaf_ok = verify.verify_trees(src2, bak, cache_a=ca, cache_b=cb)
+    assert not bool(ok)
+    assert not bool(leaf_ok["a"]) and bool(leaf_ok["b"])
+    assert eng.stats.cycles - snap.cycles == eng.cycles_for(CHUNK * 32)
+
+
+def test_cache_conflicts_are_refused():
+    """A shared cache across verify_trees' two trees, or a tree_digest
+    engine= that isn't the cache's, silently defeats the incremental
+    contract — both must raise."""
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=CHUNK)
+    tree = {"x": _words(CHUNK)}
+    with pytest.raises(ValueError, match="distinct"):
+        verify.verify_trees(tree, tree, cache_a=cache, cache_b=cache)
+    with pytest.raises(ValueError, match="conflict"):
+        verify.tree_digest(tree, engine=CimEngine(impl="ref"), cache=cache)
+    with pytest.raises(ValueError, match="chunk_words"):
+        verify.tree_digest(tree, chunk_words=2 * CHUNK, cache=cache)
+    with pytest.raises(ValueError, match="impl"):
+        verify.tree_digest(tree, "interpret", cache=cache)
+    with pytest.raises(ValueError, match="digest_width"):
+        verify.tree_digest(tree, cache=DigestCache(
+            engine=eng, chunk_words=CHUNK, digest_width=96))
+    # the cache's own engine (or none) is fine
+    verify.tree_digest(tree, engine=eng, cache=cache)
+    verify.tree_digest(tree, cache=cache)
+
+
+def test_cache_geometry_scales_dispatch():
+    """More banks -> fewer cycles for the same dirty chunk: the incremental
+    path inherits the bank-scaling model."""
+    chunk = 1 << 16                    # big enough that ceil() divides evenly
+    buf = _words(4 * chunk)
+    new = _flip_chunk(buf, 3, chunk)
+    cyc = []
+    for banks in (1, 8):
+        eng = CimEngine(BankGeometry(banks=banks), impl="ref")
+        cache = DigestCache(engine=eng, chunk_words=chunk)
+        cache.digests({"x": buf})
+        snap = eng.stats.snapshot()
+        cache.digests({"x": new})
+        cyc.append(eng.stats.cycles - snap.cycles)
+    assert cyc[0] == 8 * cyc[1]

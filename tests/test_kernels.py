@@ -151,20 +151,22 @@ def test_cipher_rejects_non_uint32():
 
 
 # ---------------------------------------------------------------------------
-# grid regression: non-divisible row counts must pad rows, never shrink the
-# tile to br=1 (which explodes the Pallas grid to one row per step)
+# grid regression: non-divisible shapes must pad up to the tile, never shrink
+# the tile to 1 (which explodes the Pallas grid to one row/word per step)
 # ---------------------------------------------------------------------------
 
 N_ODD = 513 * 128  # 513 tile rows of 128 words: 513 % 512 != 0
 
 
 def _spy(monkeypatch, module, name):
+    """Record the first operand's shape and the kwargs of a kernel call."""
     seen = {}
     real = getattr(module, name)
 
-    def wrapper(words, *args, **kw):
-        seen["rows"], seen["br"] = words.shape[0], kw["br"]
-        return real(words, *args, **kw)
+    def wrapper(x, *args, **kw):
+        seen["rows"], seen["shape"] = x.shape[0], x.shape
+        seen.update(kw)
+        return real(x, *args, **kw)
 
     monkeypatch.setattr(module, name, wrapper)
     return seen
@@ -194,6 +196,37 @@ def test_cipher_grid_never_degenerates_to_one_row(monkeypatch):
         np.asarray(ops.stream_cipher(buf, key, counter=5, impl="ref")))
 
 
+def test_binarize_grid_never_degenerates_to_one_row(monkeypatch):
+    """300 rows with bm=256 must pad to 512 (grid of 2), not shrink to bm=1
+    (grid of 300) — the digest/stream_cipher fix applied to the fused pack."""
+    seen = _spy(monkeypatch, ops._pack, "pack")
+    x = jnp.asarray(_rand(300, 64))
+    p, a = ops.binarize(x, impl="interpret")
+    assert seen["bm"] == 256, seen
+    assert seen["rows"] % seen["bm"] == 0
+    assert seen["rows"] // seen["bm"] == 2    # grid of 2 steps, not 300
+    p_ref, a_ref = ops.binarize(x, impl="ref")
+    assert p.shape == p_ref.shape and a.shape == a_ref.shape
+    assert np.array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-6)
+
+
+def test_xnor_matmul_tile_never_degenerates_to_bk_one(monkeypatch):
+    """kw=96 packed words with bk=64 must pad kw to 128 (k-grid of 2), not
+    shrink to bk=1 (k-grid of 96); valid_k keeps the result exact."""
+    seen = _spy(monkeypatch, ops._xnor_gemm, "xnor_gemm")
+    k = 96 * 32                               # kw = 96 words
+    a, b = _rand(16, k), _rand(8, k)
+    pa = bitpack.pack_bits(jnp.asarray(a))
+    pb = bitpack.pack_bits(jnp.asarray(b))
+    got = ops.xnor_matmul(pa, pb, k, impl="interpret")   # default bk=64
+    assert seen["bk"] == 64, seen
+    assert seen["shape"][1] % seen["bk"] == 0
+    assert seen["shape"][1] // seen["bk"] == 2           # k-grid of 2, not 96
+    want = ref.xnor_dot_float(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------------------
 # bulk XOR/XNOR (the banked engine's compute tile, DESIGN.md §10)
 # ---------------------------------------------------------------------------
@@ -215,6 +248,21 @@ def test_bulk_op_preserves_shape():
     b = jnp.asarray(RNG.integers(0, 2**32, (13, 17), dtype=np.uint32))
     out = ops.bulk_op(a, b, "xnor", impl="interpret")
     assert out.shape == a.shape and out.dtype == jnp.uint32
+
+
+def test_as_words_is_byte_true_for_host_64bit_arrays():
+    """numpy float64/int64 inputs must stream their true bytes — with x64
+    off, a jnp.asarray-first path would silently drop half of every
+    element."""
+    x = np.arange(10, dtype=np.float64) * 0.5
+    w = np.asarray(ops.as_words(x))
+    assert w.size == 20 and w.tobytes() == x.tobytes()
+    i = np.arange(10, dtype=np.int64) << 40     # live bits above bit 31
+    assert np.asarray(ops.as_words(i)).tobytes() == i.tobytes()
+    # jax-array and numpy paths agree for 32-bit dtypes
+    f = RNG.standard_normal(33).astype(np.float32)
+    assert np.array_equal(np.asarray(ops.as_words(f)),
+                          np.asarray(ops.as_words(jnp.asarray(f))))
 
 
 def test_bulk_op_rejects_bad_inputs():

@@ -62,6 +62,35 @@ def test_cipher_involution_property(n, ctr):
     assert np.array_equal(np.asarray(dec), np.asarray(buf))
 
 
+@given(st.integers(2, 10), st.integers(1, 255), st.data())
+@settings(max_examples=25, deadline=None)
+def test_digest_cache_redigests_exactly_the_dirty_chunks(n_chunks, tail,
+                                                         data):
+    """DigestCache property (DESIGN.md §12): flipping bits in any subset of
+    chunks re-dispatches exactly that many chunk digests, and the updated
+    digest equals a fresh one-shot digest."""
+    from repro.core.engine import CimEngine
+    from repro.core.incremental import DigestCache
+    chunk = 256
+    n = (n_chunks - 1) * chunk + tail
+    eng = CimEngine(impl="ref")
+    cache = DigestCache(engine=eng, chunk_words=chunk)
+    buf = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    cache.digests({"x": buf})
+
+    dirty = data.draw(st.sets(st.integers(0, n_chunks - 1), max_size=n_chunks))
+    new = buf
+    for i in sorted(dirty):
+        pos = data.draw(st.integers(i * chunk,
+                                    min((i + 1) * chunk, n) - 1))
+        new = new.at[pos].set(new[pos] ^ np.uint32(1))
+    calls0 = eng.stats.by_op["digest"][2]
+    got = cache.digests({"x": new})
+    assert cache.last.dirty_chunks == len(dirty)
+    assert eng.stats.by_op["digest"][2] - calls0 == len(dirty)
+    assert np.array_equal(got["x"], np.asarray(ops.digest(new, impl="ref")))
+
+
 @given(st.integers(1, 3000))
 @settings(max_examples=20, deadline=None)
 def test_bulk_op_involution_and_complement_property(n):

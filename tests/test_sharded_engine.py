@@ -101,6 +101,24 @@ def test_sharded_engine_accounts_stats():
     assert eng.stats.cycles == 2 * eng.cycles_for(256 * 32)
 
 
+def test_sharded_verify_copy_accepts_non_uint32(sharded):
+    """verify_copy must route non-uint32 buffers through as_words on the
+    sharded engine too (the bulk path is uint32-only)."""
+    x = jnp.asarray(RNG.standard_normal((65, 7)), jnp.float32)
+    assert bool(sharded.verify_copy(x, jnp.array(x)))
+    assert not bool(sharded.verify_copy(x, x.at[64, 6].set(x[64, 6] + 1)))
+    with pytest.raises(ValueError, match="shape/dtype"):
+        sharded.verify_copy(x, x.astype(jnp.int32))
+
+
+def test_sharded_digest_chunks_matches_single_device(sharded, single):
+    buf = jnp.asarray(RNG.integers(0, 2**32, 5 * 384 + 100, dtype=np.uint32))
+    got = np.asarray(sharded.digest_chunks(buf, 384))
+    want = np.asarray(single.digest_chunks(buf, 384))
+    assert got.shape == (6, 128)
+    assert np.array_equal(got, want)
+
+
 def test_sharded_engine_rejects_bad_inputs(sharded):
     a = jnp.zeros(8, jnp.uint32)
     with pytest.raises(TypeError):
