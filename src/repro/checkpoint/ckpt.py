@@ -435,11 +435,17 @@ def _check_manifest(directory: str, step: int, manifest: dict, *,
 
 def restore(directory: str, step: int | None, like, *,
             root_key: str | None = None, verify_read: bool = True,
-            engine=None):
+            engine=None, transform: Callable | None = None):
     """Load into the structure of ``like`` (abstract or concrete pytree).
 
     Delta chains resolve transparently: the result is byte-identical to
     restoring a full checkpoint of the same tree.
+
+    ``transform(key, arr)``, when given, maps each leaf (after the parity
+    check and dtype cast) to its in-memory form *as it streams off disk* —
+    the hook :func:`restore_packed` uses to pack binarizable linears one
+    leaf at a time, so the float weights are transient per-leaf and the
+    full float tree is never resident.
     """
     if step is None:
         step = latest_step(directory)
@@ -459,10 +465,43 @@ def restore(directory: str, step: int | None, like, *,
             if _digest(raw, engine).tobytes().hex() != meta["digest"]:
                 bad.append(key)
         arr = raw.reshape(meta["shape"])
-        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+        leaves.append(transform(key, arr) if transform is not None else arr)
     if bad:
         raise IOError(f"checkpoint corruption detected in leaves: {bad}")
     return jax.tree_util.tree_unflatten(tdef, leaves), step
+
+
+def restore_packed(directory: str, step: int | None, cfg, *,
+                   root_key: str | None = None, verify_read: bool = True,
+                   engine=None):
+    """Restore a float param checkpoint straight into serve-resident form.
+
+    Binarizable linears (``ParamDef.binarize`` under a ``quant="xnor"``
+    arch) are packed to :class:`repro.core.xnor_layers.PackedLinear` as
+    each leaf streams off disk — pack once at load, per-leaf-transient
+    floats, never a resident float copy of the binary filters.  The result
+    equals ``lm.pack_params(cfg, restore(...)[0])`` leaf-for-leaf.
+    Quant-"none" archs restore unchanged.
+    """
+    from repro.core import xnor_layers
+    from repro.models import lm
+
+    like = lm.abstract_params(cfg)
+    if cfg.quant != "xnor":
+        return restore(directory, step, like, root_key=root_key,
+                       verify_read=verify_read, engine=engine)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        lm.param_defs(cfg), is_leaf=lambda x: hasattr(x, "binarize"))
+    binarizable = {verify.leaf_key(p) for p, d in flat if d.binarize}
+
+    def transform(key: str, arr):
+        if key in binarizable:
+            return xnor_layers.pack_linear(jnp.asarray(arr))
+        return arr
+    return restore(directory, step, like, root_key=root_key,
+                   verify_read=verify_read, engine=engine,
+                   transform=transform)
 
 
 def latest_step(directory: str) -> int | None:

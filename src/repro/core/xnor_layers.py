@@ -30,6 +30,42 @@ from repro.core import bitpack
 from repro.kernels import ops
 
 
+@jax.tree_util.register_pytree_node_class
+class PackedLinear:
+    """A binarized linear's resident serve form: sign bit-planes + scale.
+
+    The float weight matrix is gone — only the packed planes (one bit per
+    weight, the CiM array storing binary filters) and the per-output-channel
+    XNOR-Net scale survive.  Leading axes are free (models stack per-layer
+    weights on a leading axis and ``lax.scan`` slices it off).
+
+      pb    (..., N, Kw) uint32 — sign planes of w.T, packed along K
+      beta  (..., N)     f32    — mean(|w|) per output channel
+      k     int                 — the true (unpacked) K, kept as static
+                                  pytree aux data: the packed planes round K
+                                  up to whole words, so shape alone cannot
+                                  validate the activation width — dispatch
+                                  checks ``x.shape[-1] == k`` instead of
+                                  silently mis-correcting the popcount.
+    """
+
+    __slots__ = ("pb", "beta", "k")
+
+    def __init__(self, pb, beta, k: int):
+        self.pb, self.beta, self.k = pb, beta, k
+
+    def tree_flatten(self):
+        return (self.pb, self.beta), self.k
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return (f"PackedLinear(pb={self.pb!r}, beta={self.beta!r}, "
+                f"k={self.k})")
+
+
 def xnor_linear(x: jnp.ndarray, w: jnp.ndarray, *, packed: bool = False,
                 impl: str = "auto") -> jnp.ndarray:
     """Binary linear: x (..., K) @ w (N, K)^T -> (..., N).
@@ -65,7 +101,12 @@ def xnor_linear_prepacked(x: jnp.ndarray, pb: jnp.ndarray, beta: jnp.ndarray,
     bf16 (the CiM array storing binary filters in the paper).
     """
     lead, k = x.shape[:-1], x.shape[-1]
-    assert k == valid_k, (k, valid_k)
+    if k != valid_k:
+        # a raise, not an assert: python -O would strip the assert and the
+        # popcount correction below would silently be wrong whenever the
+        # mismatched widths round to the same packed word count
+        raise ValueError(
+            f"activation width {k} != packed weight's true K {valid_k}")
     x2 = x.reshape(-1, k)
     alpha = jnp.mean(jnp.abs(x2), axis=-1)
     pa, _ = ops.binarize(x2, impl=impl)
@@ -78,3 +119,20 @@ def pack_weights(w: jnp.ndarray, impl: str = "auto"):
     """Offline weight packing: (N, K) float -> ((N, Kw) uint32, (N,) beta)."""
     pb, _ = ops.binarize(w, impl=impl)
     return pb, jnp.mean(jnp.abs(w), axis=-1).astype(jnp.float32)
+
+
+def pack_linear(w: jnp.ndarray, impl: str = "auto") -> PackedLinear:
+    """Pack a model-layout linear weight (possibly layer-stacked).
+
+    ``w``: (..., K, N) in the ``jnp.dot`` convention used by
+    :func:`repro.models.layers.linear` (columns are output channels); any
+    leading axes are mapped over, so a scanned segment's stacked
+    (n_layers, K, N) weight packs to ``PackedLinear((n, N, Kw), (n, N))``.
+    """
+    if w.ndim < 2:
+        raise ValueError(f"pack_linear needs a (..., K, N) matrix, got {w.shape}")
+    k = w.shape[-2]
+    fn = lambda wi: PackedLinear(*pack_weights(wi.T, impl=impl), k=k)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)

@@ -1,9 +1,15 @@
-"""Serving entry point: batched prefill + decode with the resident-state
-serve path (container scale uses --smoke reduced configs).
+"""Serving entry point: the continuous-batching engine over a synthetic
+mixed-length request trace (container scale uses --smoke reduced configs).
+
+Requests draw prompt length and token budget independently, so slots free
+at staggered times and admission (prefill interleaved with decode) runs
+throughout.  Reports aggregate throughput and per-request latency
+quantiles; ``--static`` runs the legacy one-batch ``generate`` path
+instead, for an A/B on the same machine.
 
 Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
-      --smoke --batch 4 --prompt-len 32 --new-tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b+xnor \
+      --smoke --slots 4 --requests 16 --new-tokens 16
 """
 
 from __future__ import annotations
@@ -13,9 +19,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as configs
 from repro.models import lm
+from repro.serve import ServeEngine, synthetic_trace
 from repro.train import serve_step
 
 
@@ -23,37 +31,78 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length in the trace")
+    ap.add_argument("--new-tokens", type=int, default=16,
+                    help="max per-request token budget in the trace")
+    ap.add_argument("--s-max", type=int, default=0,
+                    help="resident cache capacity (0: prompt+new)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--no-pack", action="store_true",
+                    help="serve quant archs from float weights (A/B)")
+    ap.add_argument("--static", action="store_true",
+                    help="legacy static-batch generate() instead")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    # independent streams for init / prompt / ctx / sampling: reusing one key
-    # correlates the generated tokens with the weight init.
-    init_key, prompt_key, ctx_key, sample_key = jax.random.split(
-        jax.random.PRNGKey(args.seed), 4)
+    init_key, _ = jax.random.split(jax.random.PRNGKey(args.seed))
     params = lm.init_params(cfg, init_key)
-    prompt = jax.random.randint(prompt_key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-    ctx = None
-    if cfg.n_ctx_tokens:
-        ctx = jax.random.normal(ctx_key, (args.batch, cfg.n_ctx_tokens,
-                                          cfg.d_model), jnp.float32) * 0.1
+    pl = max(4, args.prompt_len)
+    nt = max(2, args.new_tokens)
+    trace = synthetic_trace(
+        args.requests, cfg.vocab, seed=args.seed,
+        prompt_lens=tuple(sorted({max(2, pl // 4), max(3, pl // 2), pl})),
+        new_tokens=tuple(sorted({max(2, nt // 2), nt})),
+        n_ctx_tokens=cfg.n_ctx_tokens, d_model=cfg.d_model)
+    s_max = args.s_max or (pl + nt)
 
-    t0 = time.time()
-    out = serve_step.generate(cfg, params, prompt, args.new_tokens, ctx=ctx,
-                              temperature=args.temperature,
-                              key=sample_key if args.temperature > 0 else None)
-    dt = time.time() - t0
-    toks = args.batch * args.new_tokens
-    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s)")
-    print("first row:", out[0].tolist())
+    if args.static:
+        # the TRUE legacy path (generate_static, not the engine wrapper):
+        # one fixed batch, uniform shapes, eager per-token dispatch.
+        # independent streams for prompt / ctx / sampling, per the PR-2 fix
+        # (one shared key correlates generated tokens with the inputs).
+        prompt_key, ctx_key, sample_key = jax.random.split(
+            jax.random.PRNGKey(args.seed + 1), 3)
+        prompt = jax.random.randint(prompt_key, (args.slots, pl), 0,
+                                    cfg.vocab)
+        ctx = None
+        if cfg.n_ctx_tokens:
+            ctx = jax.random.normal(
+                ctx_key, (args.slots, cfg.n_ctx_tokens, cfg.d_model),
+                jnp.float32) * 0.1
+        t0 = time.time()
+        out = serve_step.generate_static(
+            cfg, params, prompt, nt, ctx=ctx, temperature=args.temperature,
+            key=sample_key if args.temperature > 0 else None)
+        dt = time.time() - t0
+        print(f"arch={cfg.name} static generate {out.shape} in {dt:.2f}s "
+              f"({args.slots * nt / dt:.1f} tok/s)")
+        return 0
+
+    eng = ServeEngine(cfg, params, slots=args.slots, s_max=s_max,
+                      eos_id=args.eos_id, temperature=args.temperature,
+                      seed=args.seed, pack=not args.no_pack)
+    for r in trace:
+        eng.submit(r)
+    report = eng.run()
+    lat = report.latency_quantiles((0.5, 0.95))
+    packed = (not args.no_pack) and cfg.quant == "xnor"
+    print(f"arch={cfg.name} slots={args.slots} requests={len(trace)} "
+          f"packed={packed}")
+    print(f"  generated {report.generated} tokens in {report.wall:.2f}s "
+          f"-> {report.tok_per_s:.1f} tok/s "
+          f"({report.prefills} prefills, {report.decode_steps} decode steps)")
+    print(f"  latency p50={lat[0.5]*1e3:.0f}ms p95={lat[0.95]*1e3:.0f}ms")
+    done = sum(1 for s in report.sessions.values() if s.done)
+    first = trace[0]
+    print(f"  completed {done}/{len(trace)}; first request tokens: "
+          f"{np.asarray(report.tokens(first.rid))[:8].tolist()}...")
     return 0
 
 

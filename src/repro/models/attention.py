@@ -36,10 +36,14 @@ KV_I8_SCALE = 32.0  # fixed-point scale for the int8 decode cache (values
 def attn_defs(cfg, n: int, cross: bool = False) -> dict:
     d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     defs = {
-        "wq": ParamDef((n, d, H * dh), (None, "fsdp", "tp"), cfg.dtype),
-        "wk": ParamDef((n, d, KV * dh), (None, "fsdp", "tp"), cfg.dtype),
-        "wv": ParamDef((n, d, KV * dh), (None, "fsdp", "tp"), cfg.dtype),
-        "wo": ParamDef((n, H * dh, d), (None, "tp", "fsdp"), cfg.dtype),
+        "wq": ParamDef((n, d, H * dh), (None, "fsdp", "tp"), cfg.dtype,
+                       binarize=True),
+        "wk": ParamDef((n, d, KV * dh), (None, "fsdp", "tp"), cfg.dtype,
+                       binarize=True),
+        "wv": ParamDef((n, d, KV * dh), (None, "fsdp", "tp"), cfg.dtype,
+                       binarize=True),
+        "wo": ParamDef((n, H * dh, d), (None, "tp", "fsdp"), cfg.dtype,
+                       binarize=True),
     }
     if cfg.qkv_bias and not cross:
         defs |= {
@@ -229,19 +233,25 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
                      pos: jnp.ndarray, window: int = 0):
     """One-token attention against a resident cache (compact GQA form).
 
-    x: (B, 1, d). pos: scalar int32 — current position (cache holds pos
-    valid entries before this call).  Returns (out (B, 1, d), new cache).
-    For local layers the cache is a rolling buffer of size window and the
-    write position wraps (pos % window).
+    x: (B, 1, d). pos: int32 — current position (cache holds pos valid
+    entries before this call).  Either a scalar (homogeneous batch: one
+    slice-update covers all rows) or a (B,) vector (continuous-batching
+    serve: each slot advances independently, writes scatter per row).
+    Returns (out (B, 1, d), new cache).  For local layers the cache is a
+    rolling buffer of size window and the write position wraps
+    (pos % window).
     """
     b = x.shape[0]
     s_max = cache.k.shape[2]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    pos_b = jnp.broadcast_to(pos, (b,))
+    positions = pos_b[:, None]
     q = _project_q(cfg, p, x, positions)          # (B, 1, H, dh)
     q = q.reshape(b, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
     k, v = _project_kv(cfg, p, x, positions)
 
-    slot = pos % s_max if window else pos
+    slot_b = pos_b % s_max if window else pos_b
     knew = jnp.moveaxis(k, 1, 2)   # (B, KV, 1, dh)
     vnew = jnp.moveaxis(v, 1, 2)
     i8 = cache.k.dtype == jnp.int8
@@ -250,10 +260,17 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
                                            * KV_I8_SCALE), -127, 127
                                  ).astype(jnp.int8)
         knew, vnew = enc(knew), enc(vnew)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, knew.astype(cache.k.dtype), slot, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, vnew.astype(cache.v.dtype), slot, axis=2)
+    if per_slot:
+        upd = jax.vmap(lambda c, new, s:
+                       jax.lax.dynamic_update_slice_in_dim(c, new, s, axis=1))
+        ck = upd(cache.k, knew.astype(cache.k.dtype), slot_b)
+        cv = upd(cache.v, vnew.astype(cache.v.dtype), slot_b)
+    else:
+        slot = pos % s_max if window else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, knew.astype(cache.k.dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, vnew.astype(cache.v.dtype), slot, axis=2)
 
     scale = cfg.d_head ** -0.5
     if i8:
@@ -264,11 +281,11 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
     if window:
         # rolling buffer: slot s holds absolute position
         # (pos - ((slot - s) mod s_max)); valid iff within window and <= pos
-        age = (slot - kpos) % s_max
-        valid = (age < jnp.minimum(window, pos + 1))
+        age = (slot_b[:, None] - kpos[None, :]) % s_max          # (B, s_max)
+        valid = age < jnp.minimum(window, pos_b[:, None] + 1)
     else:
-        valid = kpos <= pos
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        valid = kpos[None, :] <= pos_b[:, None]                  # (B, s_max)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bksd->bqkgd", probs.astype(q.dtype),
                      cv.astype(q.dtype),

@@ -298,14 +298,19 @@ class RglruBlock:
         d = cfg.d_model
         return {
             "ln1": _norm_def(cfg, n), "ln2": _norm_def(cfg, n),
-            "w_gate": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
-            "w_x": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "w_gate": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype,
+                               binarize=True),
+            "w_x": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype,
+                            binarize=True),
             "conv_k": ParamDef((n, cfg.conv_width, d), (None, None, "tp"),
                                jnp.float32, scale=0.5),
-            "w_r": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
-            "w_i": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype),
+            "w_r": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype,
+                            binarize=True),
+            "w_i": ParamDef((n, d, d), (None, "fsdp", "tp"), cfg.dtype,
+                            binarize=True),
             "lam": ParamDef((n, d), (None, "tp"), jnp.float32, init="ones"),
-            "w_out": ParamDef((n, d, d), (None, "tp", "fsdp"), cfg.dtype),
+            "w_out": ParamDef((n, d, d), (None, "tp", "fsdp"), cfg.dtype,
+                              binarize=True),
         } | {f"ffn_{k}": v for k, v in layers.ffn_defs(cfg, n).items()}
 
     @classmethod
@@ -374,17 +379,23 @@ class MlstmBlock:
         d, di, nh = cfg.d_model, cls._di(cfg), cfg.n_heads
         return {
             "ln1": _norm_def(cfg, n),
-            "w_up": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype),
-            "w_gate": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype),
+            "w_up": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype,
+                             binarize=True),
+            "w_gate": ParamDef((n, d, di), (None, "fsdp", "tp"), cfg.dtype,
+                               binarize=True),
             "conv_k": ParamDef((n, cfg.conv_width, di), (None, None, "tp"),
                                jnp.float32, scale=0.5),
-            "wq": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
-            "wk": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
-            "wv": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype),
+            "wq": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype,
+                           binarize=True),
+            "wk": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype,
+                           binarize=True),
+            "wv": ParamDef((n, di, di), (None, "fsdp", "tp"), cfg.dtype,
+                           binarize=True),
             "w_if": ParamDef((n, di, 2 * nh), (None, "fsdp", None), jnp.float32),
             "b_if": ParamDef((n, 2 * nh), (None, None), jnp.float32, init="zeros"),
             "out_norm": ParamDef((n, di), (None, "tp"), jnp.float32, init="ones"),
-            "w_down": ParamDef((n, di, d), (None, "tp", "fsdp"), cfg.dtype),
+            "w_down": ParamDef((n, di, d), (None, "tp", "fsdp"), cfg.dtype,
+                               binarize=True),
         }
 
     @classmethod
@@ -474,14 +485,17 @@ class SlstmBlock:
         dff = int(4 * d / 3 / 64) * 64 * 2  # GLU up width (xLSTM 4/3 factor)
         return {
             "ln1": _norm_def(cfg, n),
-            "w_gates": ParamDef((n, d, 4 * d), (None, "fsdp", "tp"), cfg.dtype),
+            "w_gates": ParamDef((n, d, 4 * d), (None, "fsdp", "tp"), cfg.dtype,
+                                binarize=True),
             # r_kernel is tiny and nh (4) won't divide 16-way TP: replicate
             "r_kernel": ParamDef((n, 4, nh, dh, dh),
                                  (None, None, None, None, None),
                                  jnp.float32, scale=0.05),
             "ln2": _norm_def(cfg, n),
-            "w_up": ParamDef((n, d, dff), (None, "fsdp", "tp"), cfg.dtype),
-            "w_down": ParamDef((n, dff // 2, d), (None, "tp", "fsdp"), cfg.dtype),
+            "w_up": ParamDef((n, d, dff), (None, "fsdp", "tp"), cfg.dtype,
+                             binarize=True),
+            "w_down": ParamDef((n, dff // 2, d), (None, "tp", "fsdp"), cfg.dtype,
+                               binarize=True),
         }
 
     @classmethod

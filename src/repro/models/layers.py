@@ -22,11 +22,19 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarr
     return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def linear(x: jnp.ndarray, w: jnp.ndarray, quant: str = "none",
+def linear(x: jnp.ndarray, w, quant: str = "none",
            bias: jnp.ndarray | None = None) -> jnp.ndarray:
     """x (..., K) @ w (K, N). ``quant="xnor"`` routes through the binary
-    XNOR-Net path (STE in float domain; bit-packed path at serve time)."""
-    if quant == "xnor":
+    XNOR-Net path (STE in float domain at train time).
+
+    ``w`` may also be a :class:`repro.core.xnor_layers.PackedLinear` — the
+    packed-residency serve form produced by ``lm.pack_params`` — in which
+    case the float weight no longer exists and the XNOR-popcount GEMM runs
+    over the resident bit-planes (bit-exact with the float sign path).
+    """
+    if isinstance(w, xnor_layers.PackedLinear):
+        y = xnor_layers.xnor_linear_prepacked(x, w.pb, w.beta, valid_k=w.k)
+    elif quant == "xnor":
         y = xnor_layers.xnor_linear(x, w.T)
     else:
         y = jnp.einsum("...k,kn->...n", x, w)
@@ -59,9 +67,12 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndar
 def ffn_defs(cfg, n: int, d_ff: int | None = None) -> dict:
     d, ff = cfg.d_model, d_ff or cfg.d_ff
     return {
-        "w1": ParamDef((n, d, ff), (None, "fsdp", "tp"), cfg.dtype),
-        "w3": ParamDef((n, d, ff), (None, "fsdp", "tp"), cfg.dtype),
-        "w2": ParamDef((n, ff, d), (None, "tp", "fsdp"), cfg.dtype),
+        "w1": ParamDef((n, d, ff), (None, "fsdp", "tp"), cfg.dtype,
+                       binarize=True),
+        "w3": ParamDef((n, d, ff), (None, "fsdp", "tp"), cfg.dtype,
+                       binarize=True),
+        "w2": ParamDef((n, ff, d), (None, "tp", "fsdp"), cfg.dtype,
+                       binarize=True),
     }
 
 

@@ -53,6 +53,23 @@ def init_params(cfg, key: jax.Array):
     return pdefs.init(param_defs(cfg), key)
 
 
+def pack_params(cfg, params, impl: str = "auto"):
+    """Serve-resident form of ``params``: every binarizable linear is packed
+    once to ``PackedLinear`` sign-planes + beta (the float weight leaves the
+    tree — packed residency, DESIGN.md §13).  Identity for quant="none"
+    archs: there is nothing binary to pack."""
+    if cfg.quant != "xnor":
+        return params
+    return pdefs.pack(param_defs(cfg), params, impl=impl)
+
+
+def packed_abstract_params(cfg):
+    """Abstract tree matching :func:`pack_params` output."""
+    if cfg.quant != "xnor":
+        return abstract_params(cfg)
+    return pdefs.pack_abstract(param_defs(cfg))
+
+
 def param_count(cfg) -> int:
     return pdefs.count(param_defs(cfg))
 
@@ -146,13 +163,20 @@ def loss_fn(cfg, params, batch: dict, q_chunk: int = 0, remat: bool = True,
 # ---------------------------------------------------------------------------
 
 class DecodeState(NamedTuple):
-    pos: jnp.ndarray          # scalar int32: number of tokens consumed
+    pos: jnp.ndarray          # int32 tokens consumed: scalar (homogeneous
+                              # batch) or (B,) per-slot (continuous batching)
     seg_states: tuple         # per-segment stacked block states
     ctx: Any = None           # encoded modality context (or None)
 
 
-def decode_state_spec(cfg, batch: int, s_max: int, abstract: bool = True):
-    """The resident serving state for (arch, batch, cache length)."""
+def decode_state_spec(cfg, batch: int, s_max: int, abstract: bool = True,
+                      per_slot_pos: bool = False):
+    """The resident serving state for (arch, batch, cache length).
+
+    ``per_slot_pos=True`` gives the continuous-batching layout: ``pos`` is a
+    (batch,) vector so heterogeneous requests can share the batch, each slot
+    advancing independently (repro.serve).
+    """
     seg_states = blocks.segment_states(cfg, cfg.segments(), batch, s_max,
                                        abstract)
     ctx = None
@@ -160,8 +184,9 @@ def decode_state_spec(cfg, batch: int, s_max: int, abstract: bool = True):
         shp = (batch, cfg.n_ctx_tokens, cfg.d_model)
         ctx = (jax.ShapeDtypeStruct(shp, cfg.dtype) if abstract
                else jnp.zeros(shp, cfg.dtype))
-    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
-           else jnp.zeros((), jnp.int32))
+    pshape = (batch,) if per_slot_pos else ()
+    pos = (jax.ShapeDtypeStruct(pshape, jnp.int32) if abstract
+           else jnp.zeros(pshape, jnp.int32))
     return DecodeState(pos, tuple(seg_states), ctx)
 
 
@@ -194,11 +219,22 @@ def prefill(cfg, params, tokens: jnp.ndarray, ctx: jnp.ndarray | None,
 
 
 def decode_step(cfg, params, token: jnp.ndarray, state: DecodeState,
-                unroll: bool = False):
-    """token (B, 1) int32 -> (logits (B, 1, V), new state)."""
+                unroll: bool = False, active: jnp.ndarray | None = None):
+    """token (B, 1) int32 -> (logits (B, 1, V), new state).
+
+    ``state.pos`` may be a scalar (homogeneous batch) or a (B,) vector
+    (continuous batching: per-slot positions).  ``active`` (B,) bool gates
+    the position advance per slot: an inactive slot's pos freezes, so its
+    (dead) cache line is rewritten in place each step instead of walking
+    forward — the slot state stays inert until an admission overwrites it.
+    Inactive rows still flow through the network (their logits are garbage
+    the scheduler ignores); under MoE their tokens also compete for expert
+    capacity, so the serve layer feeds a constant token id in dead slots.
+    """
     x = layers.embed(params["embed"], token).astype(cfg.dtype)
     x, new_states = blocks.segment_decode(cfg, _seg_params(cfg, params), x,
                                           list(state.seg_states), state.pos,
                                           state.ctx, unroll=unroll)
     logits = layers.logits(cfg, params["embed"], x)
-    return logits, DecodeState(state.pos + 1, tuple(new_states), state.ctx)
+    inc = 1 if active is None else active.astype(jnp.int32)
+    return logits, DecodeState(state.pos + inc, tuple(new_states), state.ctx)

@@ -32,6 +32,9 @@ class ParamDef(NamedTuple):
     dtype: Any = jnp.float32
     init: str = "normal"    # "normal" | "zeros" | "ones" | "embed"
     scale: float | None = None  # None => 1/sqrt(fan_in)
+    binarize: bool = False  # binarizable linear under quant="xnor": packed to
+                            # sign-planes for serving (routers/norms/embeddings
+                            # /lm-head stay full precision — DESIGN.md §5)
 
 
 def abstract(defs):
@@ -77,3 +80,46 @@ def init(defs, key: jax.Array):
 def count(defs) -> int:
     return sum(math.prod(d.shape) for d in jax.tree.leaves(
         defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+
+# ---------------------------------------------------------------------------
+# packed-weight residency (serve form of binarizable linears)
+# ---------------------------------------------------------------------------
+
+
+def pack(defs, tree, impl: str = "auto"):
+    """Replace every ``binarize``-marked float leaf with its packed form.
+
+    The returned tree holds :class:`repro.core.xnor_layers.PackedLinear`
+    nodes (uint32 sign planes + f32 beta) where the defs mark binarizable
+    linears — the float weights for those leaves are *absent* from the
+    result, which is the packed-residency contract: at serve time the
+    binary filters only exist as bit-planes (a 16x footprint cut vs bf16).
+    All other leaves pass through unchanged.  Idempotent: leaves that are
+    already ``PackedLinear`` pass through too, so a tree loaded via
+    ``ckpt.restore_packed`` can be handed to consumers that pack by default
+    (``ServeEngine``) without double-packing.
+    """
+    from repro.core import xnor_layers
+
+    def one(d, w):
+        if d.binarize and not isinstance(w, xnor_layers.PackedLinear):
+            return xnor_layers.pack_linear(w, impl=impl)
+        return w
+    return jax.tree.map(one, defs, tree,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def pack_abstract(defs):
+    """ShapeDtypeStruct tree of :func:`pack` output (restore-`like` trees)."""
+    from repro.core import bitpack, xnor_layers
+
+    def one(d):
+        if not d.binarize:
+            return jax.ShapeDtypeStruct(d.shape, d.dtype)
+        *lead, k, n = d.shape
+        kw = bitpack.packed_width(k)
+        return xnor_layers.PackedLinear(
+            jax.ShapeDtypeStruct((*lead, n, kw), jnp.uint32),
+            jax.ShapeDtypeStruct((*lead, n), jnp.float32), k=k)
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,0 +1,13 @@
+"""Continuous-batching XNOR serve engine (DESIGN.md §13).
+
+Public surface:
+  Request / Session / synthetic_trace — the request model,
+  SlotPool                            — pure scheduling bookkeeping,
+  ServeEngine / ServeReport           — the engine itself.
+"""
+
+from repro.serve.scheduler import ServeEngine, ServeReport, SlotPool
+from repro.serve.session import Request, Session, synthetic_trace
+
+__all__ = ["Request", "ServeEngine", "ServeReport", "Session", "SlotPool",
+           "synthetic_trace"]

@@ -1,0 +1,334 @@
+"""Continuous-batching decode engine (DESIGN.md §13).
+
+The paper's application regime — binary filters resident in the CiM array,
+XNOR-popcount as the serve-time inner loop — needs a *request-level* engine
+on top of the token-level serve path.  This module provides it:
+
+* a FIFO request queue and a fixed pool of batch **slots** over one resident
+  :class:`repro.models.lm.DecodeState` (per-slot position vector);
+* **admission**: a freed slot is immediately refilled — the new request is
+  prefilled (exact prompt length, batch 1) and its per-layer state scattered
+  into the resident batch, interleaved with decode;
+* **eviction** on EOS or max-token budget: the slot is marked free, its
+  device state left in place (dead rows are inert: position frozen via the
+  active mask, overwritten by the next admission);
+* **one jitted decode program** for the whole run: position vector, active
+  mask, sampling seeds are device *data*, never trace constants, so slots
+  joining/leaving never retrace.  Prefill traces once per distinct prompt
+  length (exact lengths — right-padding would corrupt recurrent-arch state).
+
+With ``pack=True`` (default) and a ``quant="xnor"`` arch the resident
+params are the packed form (:func:`repro.models.lm.pack_params`): binary
+filter planes + beta, float weights absent — packed-weight residency.
+
+Scheduling bookkeeping (:class:`SlotPool`) is pure host logic, separated
+from the jitted programs so it is unit-testable without a model.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.serve.session import Request, Session
+
+
+class SlotPool:
+    """Slot bookkeeping: FIFO admission into the lowest free slot.
+
+    Pure host-side state machine (no jax) — determinism of the whole engine
+    reduces to this class being deterministic, which the unit tests pin.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots))        # kept sorted ascending
+        self._queue: collections.deque[Session] = collections.deque()
+        self._active: dict[int, Session] = {}
+
+    # -- queue side ----------------------------------------------------------
+
+    def submit(self, session: Session) -> None:
+        self._queue.append(session)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    # -- slot side -----------------------------------------------------------
+
+    @property
+    def free_slots(self) -> list[int]:
+        return list(self._free)
+
+    @property
+    def active(self) -> dict[int, Session]:
+        return dict(self._active)
+
+    def admissible(self) -> bool:
+        return bool(self._queue) and bool(self._free)
+
+    def admit(self) -> tuple[Session, int]:
+        """Pop the oldest queued session into the lowest free slot."""
+        if not self._queue:
+            raise RuntimeError("admit() with an empty queue")
+        if not self._free:
+            raise RuntimeError("admit() with no free slot")
+        session = self._queue.popleft()
+        slot = self._free.pop(0)
+        session.slot = slot
+        self._active[slot] = session
+        return session, slot
+
+    def evict(self, slot: int) -> Session:
+        """Free a slot; its session leaves the active set."""
+        if slot not in self._active:
+            raise KeyError(f"slot {slot} is not active")
+        session = self._active.pop(slot)
+        self._free.append(slot)
+        self._free.sort()
+        return session
+
+    def idle(self) -> bool:
+        return not self._queue and not self._active
+
+
+# ---------------------------------------------------------------------------
+# jitted programs (module level: one trace cache per (cfg, shapes))
+# ---------------------------------------------------------------------------
+
+
+def _sample_tokens(cfg, logits, key, seeds, temperature: float):
+    """Last-position sampling, sliced to the true vocab (pad ids never
+    sampled).  Per-row keys fold the host-computed (rid, step) seed into the
+    engine key, so draws depend only on the request and its token index —
+    never on slot assignment or batch composition (determinism under a
+    fixed seed, whatever the schedule)."""
+    lg = logits[:, -1, :cfg.vocab].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+
+    def one(row, seed):
+        g = jax.random.gumbel(jax.random.fold_in(key, seed), row.shape,
+                              jnp.float32)
+        return jnp.argmax(row / temperature + g, axis=-1).astype(jnp.int32)
+    return jax.vmap(one)(lg, seeds)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "s_max", "temperature"))
+def _prefill_program(cfg, params, tokens, ctx, key, seeds, *, s_max: int,
+                     temperature: float):
+    """(1, P) prompt -> (first sampled token (1, 1), DecodeState for B=1)."""
+    logits, state = lm.prefill(cfg, params, tokens, ctx, s_max=s_max)
+    return _sample_tokens(cfg, logits, key, seeds, temperature), state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature"),
+                   donate_argnames=("state",))
+def _decode_program(cfg, params, tokens, state, active, key, seeds, *,
+                    temperature: float):
+    """One token for every slot; inactive slots' positions stay frozen."""
+    logits, state = lm.decode_step(cfg, params, tokens, state, active=active)
+    return _sample_tokens(cfg, logits, key, seeds, temperature), state
+
+
+@functools.partial(jax.jit, donate_argnames=("resident",))
+def _insert_program(resident: lm.DecodeState, one: lm.DecodeState, slot):
+    """Scatter a freshly prefilled B=1 state into resident slot ``slot``.
+
+    Segment-state leaves are layer-stacked with batch at axis 1
+    ((n_layers, B, ...)); ``ctx`` and ``pos`` carry batch at axis 0.  The
+    resident tree follows ``lm.decode_state_spec``: for enc-dec archs its
+    ``ctx`` is None (cross-attn KV lives inside the per-layer states; the
+    decode path never reads ``DecodeState.ctx``), so the prefill state's
+    encoder output is dropped rather than kept resident.
+    """
+    seg = jax.tree.map(lambda r, o: r.at[:, slot].set(o[:, 0]),
+                       resident.seg_states, one.seg_states)
+    pos = resident.pos.at[slot].set(one.pos)
+    ctx = (resident.ctx if resident.ctx is None
+           else resident.ctx.at[slot].set(one.ctx[0]))
+    return lm.DecodeState(pos, seg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one :meth:`ServeEngine.run`."""
+
+    sessions: dict[int, Session]
+    wall: float
+    decode_steps: int
+    prefills: int
+
+    @property
+    def generated(self) -> int:
+        return sum(len(s.tokens) for s in self.sessions.values())
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.generated / max(self.wall, 1e-9)
+
+    def tokens(self, rid: int) -> np.ndarray:
+        return np.asarray(self.sessions[rid].tokens, np.int32)
+
+    def latency_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
+        lats = sorted(s.latency for s in self.sessions.values())
+        if not lats:
+            return {q: 0.0 for q in qs}
+        return {q: float(np.quantile(lats, q)) for q in qs}
+
+
+class ServeEngine:
+    """Continuous-batching serve engine over one resident decode state.
+
+    Args:
+      cfg: ArchConfig. ``quant="xnor"`` archs serve from packed weights
+        unless ``pack=False``.
+      params: float param tree (as from ``lm.init_params`` / ``ckpt``);
+        packed at construction when applicable — the float copies of
+        binarized linears are not retained by the engine.
+      slots: resident batch width (concurrent requests).
+      s_max: per-slot cache capacity; every request needs
+        ``len(prompt) + max_new_tokens - 1 <= s_max``.
+      eos_id: token id that terminates a request early (None: budget only).
+      temperature: 0 = greedy (deterministic); > 0 = gumbel sampling with
+        schedule-independent per-(request, step) keys.
+      seed: engine sampling seed.
+      pack: keep binarizable linears packed-resident (xnor archs only).
+    """
+
+    def __init__(self, cfg, params, *, slots: int, s_max: int,
+                 eos_id: int | None = None, temperature: float = 0.0,
+                 seed: int = 0, pack: bool = True):
+        self.cfg = cfg
+        self.slots = slots
+        self.s_max = s_max
+        self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.params = lm.pack_params(cfg, params) if pack else params
+        self.pool = SlotPool(slots)
+        self.sessions: dict[int, Session] = {}
+        self._key = jax.random.PRNGKey(seed)
+        # the single source of truth for the resident layout is
+        # lm.decode_state_spec (the same tree the dry-run lowers)
+        self._state = lm.decode_state_spec(cfg, slots, s_max, abstract=False,
+                                           per_slot_pos=True)
+        # host-side mirrors of the device batch (tiny, moved every step)
+        self._tokens = np.zeros((slots, 1), np.int32)
+        self._active = np.zeros((slots,), bool)
+        self._decode_steps = 0
+        self._prefills = 0
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, request: Request) -> Session:
+        if request.rid in self.sessions:
+            raise ValueError(f"duplicate request id {request.rid}")
+        need = request.prompt.shape[0] + request.max_new_tokens - 1
+        if need > self.s_max:
+            raise ValueError(
+                f"request {request.rid} needs {need} cache positions, "
+                f"engine capacity is s_max={self.s_max}")
+        session = Session(request, t_submit=time.monotonic())
+        self.sessions[request.rid] = session
+        self.pool.submit(session)
+        return session
+
+    def _seed_for(self, rid: int, step: int) -> int:
+        return (rid * 1_000_003 + step) % (2**31 - 1)
+
+    def _finish(self, session: Session, reason: str) -> None:
+        session.finish_reason = reason
+        session.t_done = time.monotonic()
+        if session.slot is not None and session.slot in self.pool.active:
+            slot = session.slot
+            self.pool.evict(slot)
+            self._active[slot] = False
+            self._tokens[slot] = 0   # dead slots feed a constant token id
+                                     # (keeps MoE capacity competition quiet)
+
+    def _admit(self) -> None:
+        """Fill every free slot from the queue (prefill + scatter insert)."""
+        while self.pool.admissible():
+            session, slot = self.pool.admit()
+            req = session.request
+            session.t_admit = time.monotonic()
+            tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+            ctx = None
+            if req.ctx is not None:
+                ctx = jnp.asarray(np.asarray(req.ctx)[None])
+            elif self.cfg.n_ctx_tokens:
+                raise ValueError(
+                    f"arch {self.cfg.name} needs per-request ctx; request "
+                    f"{req.rid} has none")
+            seeds = jnp.asarray([self._seed_for(req.rid, 0)], jnp.int32)
+            tok, one = _prefill_program(
+                self.cfg, self.params, tokens, ctx, self._key, seeds,
+                s_max=self.s_max, temperature=self.temperature)
+            self._prefills += 1
+            t = int(np.asarray(tok)[0, 0])
+            session.tokens.append(t)
+            session.t_first = time.monotonic()
+            if (self.eos_id is not None and t == self.eos_id):
+                self._finish(session, "eos")
+                continue
+            if req.max_new_tokens == 1:
+                self._finish(session, "length")
+                continue
+            self._state = _insert_program(self._state, one, jnp.int32(slot))
+            self._tokens[slot, 0] = t
+            self._active[slot] = True
+
+    def _decode_once(self) -> None:
+        """One batched decode step; append/evict per active slot."""
+        active_sessions = self.pool.active          # slot -> session
+        seeds = np.zeros((self.slots,), np.int32)
+        for slot, sess in active_sessions.items():
+            seeds[slot] = self._seed_for(sess.request.rid, len(sess.tokens))
+        toks, self._state = _decode_program(
+            self.cfg, self.params, jnp.asarray(self._tokens), self._state,
+            jnp.asarray(self._active), self._key, jnp.asarray(seeds),
+            temperature=self.temperature)
+        self._decode_steps += 1
+        toks = np.asarray(toks)                     # the per-step sync point
+        for slot, sess in active_sessions.items():
+            t = int(toks[slot, 0])
+            sess.tokens.append(t)
+            self._tokens[slot, 0] = t
+            if self.eos_id is not None and t == self.eos_id:
+                self._finish(sess, "eos")
+            elif len(sess.tokens) >= sess.request.max_new_tokens:
+                self._finish(sess, "length")
+
+    def step(self) -> bool:
+        """Admit then decode once; returns False when fully drained."""
+        self._admit()
+        if self.pool.active:
+            self._decode_once()
+        return not self.pool.idle()
+
+    def run(self) -> ServeReport:
+        """Drain queue + slots; returns the per-request report."""
+        t0 = time.monotonic()
+        while self.step():
+            pass
+        return ServeReport(sessions=dict(self.sessions),
+                           wall=time.monotonic() - t0,
+                           decode_steps=self._decode_steps,
+                           prefills=self._prefills)

@@ -3,10 +3,14 @@
   prefill_step — consume a full prompt, build the resident decode state.
   decode_step  — one token for the whole batch against resident state.
   sample       — greedy / temperature sampling from the last-token logits.
+  generate     — compatibility wrapper over the continuous-batching engine
+                 (:mod:`repro.serve`): the historical static-batch API,
+                 now served by the same jitted slot-pool decode program.
 """
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -34,13 +38,18 @@ def sample(logits: jnp.ndarray, key=None, temperature: float = 0.0):
         jnp.int32)[:, None]
 
 
-def generate(cfg, params, prompt: jnp.ndarray, n_new: int,
-             ctx: jnp.ndarray | None = None, temperature: float = 0.0,
-             key=None):
-    """Greedy/temperature generation loop (example-scale, jit per step).
+def generate_static(cfg, params, prompt: jnp.ndarray, n_new: int,
+                    ctx: jnp.ndarray | None = None, temperature: float = 0.0,
+                    key=None):
+    """The pre-engine static-batch loop, preserved verbatim: batch prefill +
+    eager per-token decode, uniform shapes, jit dispatch per step.  This is
+    the baseline ``benchmarks/serve_throughput.py`` and ``launch/serve.py
+    --static`` measure the engine against — :func:`generate` itself now
+    routes through the engine, so an A/B against it would be engine vs
+    engine.
 
-    Logits are sliced to the true vocab (the table is padded to 256-multiples
-    for TP; pad ids must never be sampled)."""
+    Logits are sliced to the true vocab (the table is padded to
+    256-multiples for TP; pad ids must never be sampled)."""
     s_max = prompt.shape[1] + n_new
     batch = {"tokens": prompt}
     if ctx is not None:
@@ -56,3 +65,36 @@ def generate(cfg, params, prompt: jnp.ndarray, n_new: int,
         tok = sample(logits[..., :cfg.vocab], key, temperature)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+def generate(cfg, params, prompt: jnp.ndarray, n_new: int,
+             ctx: jnp.ndarray | None = None, temperature: float = 0.0,
+             key=None):
+    """Greedy/temperature generation — compatibility wrapper.
+
+    Each prompt row becomes one engine request (a single-trace B-request
+    run); greedy outputs are token-identical to the historical static loop
+    (per-row math is batch-composition independent).  ``pack=False`` keeps
+    the float sign path for quant archs, matching the old numerics exactly;
+    use :class:`repro.serve.ServeEngine` directly for packed residency and
+    heterogeneous traces.
+
+    Logits are sliced to the true vocab inside the engine (the table is
+    padded to 256-multiples for TP; pad ids must never be sampled).
+    """
+    from repro.serve import Request, ServeEngine
+
+    b, p = prompt.shape
+    seed = 0
+    if key is not None:
+        seed = int(np.asarray(jax.random.randint(key, (), 0, 2**31 - 1)))
+    eng = ServeEngine(cfg, params, slots=b, s_max=p + n_new,
+                      temperature=temperature, seed=seed, pack=False)
+    prompt_h = np.asarray(prompt, np.int32)
+    ctx_h = None if ctx is None else np.asarray(ctx)
+    for i in range(b):
+        eng.submit(Request(rid=i, prompt=prompt_h[i], max_new_tokens=n_new,
+                           ctx=None if ctx_h is None else ctx_h[i]))
+    report = eng.run()
+    return jnp.asarray(np.stack([report.tokens(i) for i in range(b)]),
+                       jnp.int32)

@@ -2,6 +2,7 @@
 grad, prefill/decode consistency, XNOR-quant variant, MoE properties."""
 
 import dataclasses
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +17,10 @@ ARCHS = sorted(configs.ALL)
 
 def _setup(name, B=2, S=12, **over):
     cfg = configs.ALL[name].smoke(**over)
-    key = jax.random.PRNGKey(abs(hash(name)) % 2**31)
+    # crc32, NOT hash(): str hashes are salted per process (PYTHONHASHSEED),
+    # so hash-derived keys redraw params/tokens every pytest run — the i8
+    # cache-accuracy threshold then flakes on tail draws.  crc32 is stable.
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % 2**31)
     params = lm.init_params(cfg, key)
     tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
     ctx = None
