@@ -10,7 +10,7 @@ import traceback
 
 from benchmarks import (bank_scaling, fig4_functional, fig5_montecarlo,
                         fig6_xnornet, incremental_verify, roofline_bench,
-                        table1_latency, verify_throughput)
+                        serve_throughput, table1_latency, verify_throughput)
 
 SUITES = [
     ("fig4", fig4_functional),
@@ -20,6 +20,7 @@ SUITES = [
     ("verify", verify_throughput),
     ("incremental", incremental_verify),
     ("banks", bank_scaling),
+    ("serve", serve_throughput),
     ("roofline", roofline_bench),
 ]
 

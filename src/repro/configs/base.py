@@ -62,6 +62,11 @@ class ArchConfig:
     # numerics / serving
     dtype: Any = jnp.bfloat16
     kv_cache_dtype: str = "bf16"   # "bf16" | "i8" (fixed-point decode cache)
+    kv_i8_scale: float = 32.0      # fixed-point scale for the i8 cache
+                                   # (RMS-normed/RoPE'd |k| < ~4; 32 gives
+                                   # ~2% rounding)
+    block_size: int = 16           # paged KV-cache tokens per block
+    prefill_chunk: int = 32        # chunked-prefill piece size (serve)
     supports_long_context: bool = False
     notes: str = ""
 
@@ -111,6 +116,8 @@ class ArchConfig:
             vocab=256,
             local_window=32,
             mlstm_chunk=8,
+            block_size=8,
+            prefill_chunk=8,
             name=self.name + "-smoke",
         )
         if self.n_experts:

@@ -46,6 +46,14 @@ def main() -> int:
                     help="serve quant archs from float weights (A/B)")
     ap.add_argument("--static", action="store_true",
                     help="legacy static-batch generate() instead")
+    ap.add_argument("--dense", action="store_true",
+                    help="slot-dense KV layout instead of block-paged (A/B)")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged-KV tokens per block (0: cfg.block_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill piece size (0: cfg.prefill_chunk)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="shared block-pool size (0: slots x full tables)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -87,18 +95,36 @@ def main() -> int:
 
     eng = ServeEngine(cfg, params, slots=args.slots, s_max=s_max,
                       eos_id=args.eos_id, temperature=args.temperature,
-                      seed=args.seed, pack=not args.no_pack)
+                      seed=args.seed, pack=not args.no_pack,
+                      paged=not args.dense, block_size=args.block_size,
+                      prefill_chunk=args.prefill_chunk,
+                      n_blocks=args.n_blocks)
     for r in trace:
         eng.submit(r)
     report = eng.run()
     lat = report.latency_quantiles((0.5, 0.95))
+    ttft = report.ttft_quantiles((0.5, 0.95))
+    qwait = report.queue_wait_quantiles((0.5, 0.95))
     packed = (not args.no_pack) and cfg.quant == "xnor"
     print(f"arch={cfg.name} slots={args.slots} requests={len(trace)} "
-          f"packed={packed}")
+          f"packed={packed} layout={'dense' if args.dense else 'paged'}")
     print(f"  generated {report.generated} tokens in {report.wall:.2f}s "
           f"-> {report.tok_per_s:.1f} tok/s "
           f"({report.prefills} prefills, {report.decode_steps} decode steps)")
     print(f"  latency p50={lat[0.5]*1e3:.0f}ms p95={lat[0.95]*1e3:.0f}ms")
+    # queue-wait is the scheduling share of TTFT (time spent waiting for a
+    # slot / for blocks); the remainder is prefill compute — reported
+    # separately so backpressure and compute cost are distinguishable
+    print(f"  ttft    p50={ttft[0.5]*1e3:.0f}ms p95={ttft[0.95]*1e3:.0f}ms "
+          f"(queue-wait p50={qwait[0.5]*1e3:.0f}ms "
+          f"p95={qwait[0.95]*1e3:.0f}ms)")
+    st = report.stats
+    if not args.dense and st.blocks_total:
+        print(f"  blocks: peak {st.blocks_peak}/{st.blocks_total} "
+              f"mean {st.blocks_mean:.1f} "
+              f"(util {st.block_utilization:.0%}); "
+              f"prefill traces {st.prefill_traces} "
+              f"({st.prefill_chunks} chunks)")
     done = sum(1 for s in report.sessions.values() if s.done)
     first = trace[0]
     print(f"  completed {done}/{len(trace)}; first request tokens: "

@@ -13,6 +13,9 @@ Layout conventions:
                score all-reduces (measured, EXPERIMENTS.md §Perf iter 1).
   KV cache     (B, KV, S_max, dh) — decode keeps the compact GQA form (the
                cache is the memory bottleneck; never expanded).
+  paged cache  (n_blocks, KV, block_size, dh) — the block-paged serve form
+               (DESIGN.md §14): a shared pool with no batch axis, addressed
+               through per-slot int32 block tables.
 Scores accumulate in f32; softmax is f32 with max subtraction.
 """
 
@@ -29,8 +32,14 @@ from repro.models import layers
 from repro.models.params import ParamDef
 
 NEG_INF = -1e30
-KV_I8_SCALE = 32.0  # fixed-point scale for the int8 decode cache (values
-                    # are RMS-normed/RoPE'd, |k| < ~4; 32 gives ~2% rounding)
+
+
+def i8_encode(cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point encode for the int8 decode cache (scale is a config
+    axis: ``cfg.kv_i8_scale``, default 32 — values are RMS-normed/RoPE'd,
+    |k| < ~4, so 32 gives ~2% rounding)."""
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * cfg.kv_i8_scale),
+                    -127, 127).astype(jnp.int8)
 
 
 def attn_defs(cfg, n: int, cross: bool = False) -> dict:
@@ -256,10 +265,7 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
     vnew = jnp.moveaxis(v, 1, 2)
     i8 = cache.k.dtype == jnp.int8
     if i8:  # fixed-point low-bit cache (paper-domain: quantized residency)
-        enc = lambda x: jnp.clip(jnp.round(x.astype(jnp.float32)
-                                           * KV_I8_SCALE), -127, 127
-                                 ).astype(jnp.int8)
-        knew, vnew = enc(knew), enc(vnew)
+        knew, vnew = i8_encode(cfg, knew), i8_encode(cfg, vnew)
     if per_slot:
         upd = jax.vmap(lambda c, new, s:
                        jax.lax.dynamic_update_slice_in_dim(c, new, s, axis=1))
@@ -274,7 +280,7 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
 
     scale = cfg.d_head ** -0.5
     if i8:
-        scale = scale / KV_I8_SCALE
+        scale = scale / cfg.kv_i8_scale
     scores = jnp.einsum("bqkgd,bksd->bkgqs", q, ck.astype(q.dtype),
                         preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(s_max)
@@ -291,10 +297,114 @@ def decode_attention(cfg, p: dict, x: jnp.ndarray, cache: KVCache,
                      cv.astype(q.dtype),
                      preferred_element_type=jnp.float32).astype(x.dtype)
     if i8:
-        out = out / KV_I8_SCALE
+        out = out / cfg.kv_i8_scale
     out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
     return layers.linear(out, p["wo"], cfg.quant), KVCache(ck, cv)
 
 
 def decode_cross_attention(cfg, p: dict, x: jnp.ndarray, ctx_kv):
     return cross_attention(cfg, p, x, ctx_kv)
+
+
+# --- block-paged KV cache (DESIGN.md §14) -------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Shared block pool: ``n_blocks`` blocks of ``block_size`` token slots
+    each, in the compact GQA form.  Unlike :class:`KVCache` there is no
+    batch axis — slots address blocks through per-slot int32 block tables
+    (host-owned device data), so resident memory is proportional to tokens
+    actually cached, not ``slots x s_max``.  Physical block 0 is reserved
+    as the trash block: writes from inactive slots / padding tokens are
+    routed there and never read back."""
+
+    k: jnp.ndarray   # (n_blocks, KV, block_size, dh)
+    v: jnp.ndarray   # (n_blocks, KV, block_size, dh)
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    @classmethod
+    def zeros(cls, cfg, n_blocks: int, block_size: int, dtype=None):
+        shp = (n_blocks, cfg.n_kv_heads, block_size, cfg.d_head)
+        dt = dtype or cfg.dtype
+        return cls(jnp.zeros(shp, dt), jnp.zeros(shp, dt))
+
+    @classmethod
+    def abstract(cls, cfg, n_blocks: int, block_size: int, dtype=None):
+        shp = (n_blocks, cfg.n_kv_heads, block_size, cfg.d_head)
+        dt = dtype or cfg.dtype
+        return cls(jax.ShapeDtypeStruct(shp, dt),
+                   jax.ShapeDtypeStruct(shp, dt))
+
+
+def paged_attention(cfg, p: dict, x: jnp.ndarray, cache: PagedKVCache,
+                    table: jnp.ndarray, pos: jnp.ndarray, *, window: int = 0,
+                    valid: jnp.ndarray | None = None):
+    """Attention through a per-slot block table: scatter the new tokens into
+    the pool, gather K/V back through the table, and mask by position.
+
+    One function covers both serve regimes:
+      decode          — x (B, 1, d), per-slot ``pos`` (B,), B = slots;
+      chunked prefill — x (1, C, d), scalar-ish ``pos`` (1,) = chunk start.
+
+    ``table`` (B, W) holds physical block ids; token at absolute position q
+    lives at block ``table[b, (q // bs) % W]``, offset ``q % bs``.  For full
+    (non-window) tables ``W * bs >= s_max`` so the ring modulus is the
+    identity; for local layers the table is a block ring of capacity
+    ``W * bs >= window + C - 1`` (older blocks are recycled — blocks that
+    fall out of the window never stay resident).  ``valid`` (B, C) routes
+    padding / dead-slot writes to the reserved trash block 0.
+    Returns (out (B, C, d), new cache).
+    """
+    b, c, _ = x.shape
+    bs = cache.k.shape[2]
+    w = table.shape[1]
+    cap = w * bs
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = jnp.broadcast_to(pos, (b,))[:, None] + jnp.arange(c)[None, :]
+    q = _project_q(cfg, p, x, qpos)                  # (B, C, H, dh)
+    q = q.reshape(b, c, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+    k, v = _project_kv(cfg, p, x, qpos)              # (B, C, KV, dh)
+
+    i8 = cache.k.dtype == jnp.int8
+    if i8:
+        k, v = i8_encode(cfg, k), i8_encode(cfg, v)
+    phys = jnp.take_along_axis(table, (qpos // bs) % w, axis=1)   # (B, C)
+    if valid is not None:
+        phys = jnp.where(valid, phys, 0)             # trash block
+    off = qpos % bs
+    # advanced indices (phys, off) broadcast to (B, C); the KV slice stays:
+    # scatter target shape (B, C, KV, dh).  Distinct live tokens always hit
+    # distinct (block, offset) pairs (BlockPool uniqueness + ring sizing);
+    # only trash-block writes may collide, and those are never read.
+    ck = cache.k.at[phys, :, off].set(k.astype(cache.k.dtype))
+    cv = cache.v.at[phys, :, off].set(v.astype(cache.v.dtype))
+
+    gk = jnp.moveaxis(ck[table], 1, 2).reshape(b, cfg.n_kv_heads, cap,
+                                               cfg.d_head)
+    gv = jnp.moveaxis(cv[table], 1, 2).reshape(b, cfg.n_kv_heads, cap,
+                                               cfg.d_head)
+    scale = cfg.d_head ** -0.5
+    if i8:
+        scale = scale / cfg.kv_i8_scale
+    scores = jnp.einsum("bqkgd,bksd->bkgqs", q, gk.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    kslot = jnp.arange(cap)[None, None, :]
+    if window:
+        # ring: slot s holds the latest position p with p % cap == s; the
+        # ring capacity >= window + C - 1 guarantees every in-window key of
+        # every chunk query is still resident (DESIGN.md §14).
+        age = (qpos[:, :, None] % cap - kslot) % cap           # (B, C, cap)
+        valid_k = age < jnp.minimum(window, qpos[:, :, None] + 1)
+    else:
+        valid_k = kslot <= qpos[:, :, None]                    # (B, C, cap)
+    scores = jnp.where(valid_k[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bqkgd", probs.astype(q.dtype),
+                     gv.astype(q.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if i8:
+        out = out / cfg.kv_i8_scale
+    out = out.reshape(b, c, cfg.n_heads * cfg.d_head)
+    return layers.linear(out, p["wo"], cfg.quant), PagedKVCache(ck, cv)

@@ -22,6 +22,14 @@ Every kind implements:
   fwd(cfg, p, x, ctx, opts)             -> (x, aux, state|None)
   decode(cfg, p, x, state, pos, ctx)    -> (x, state)
   state_spec(cfg, batch, s_max, abstract) decode-state pytree per layer
+
+Paged serving (DESIGN.md §14) adds a parallel surface:
+  paged_state_spec(...)                 per-layer state with KV caches
+                                        replaced by shared PagedKVCache pools
+  paged_split / paged_merge             separate the pool (shared, no batch
+                                        axis) from dense per-slot leaves
+  decode(..., table=)                   gather/scatter through a block table
+  chunk(...)                           one chunked-prefill piece (B=1, S=C)
 """
 
 from __future__ import annotations
@@ -35,7 +43,7 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.ctx import constrain
 from repro.models import attention as attn_mod
 from repro.models import layers, moe, ssm
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKVCache
 from repro.models.params import ParamDef
 
 
@@ -94,25 +102,46 @@ def _kv_from_seq(cfg, k, v, s_max, rolling: bool = False):
         ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0)))
         cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0)))
     if cfg.kv_cache_dtype == "i8":
-        from repro.models.attention import KV_I8_SCALE
-        enc = lambda x: jnp.clip(jnp.round(x.astype(jnp.float32)
-                                           * KV_I8_SCALE), -127, 127
-                                 ).astype(jnp.int8)
-        return KVCache(enc(ck), enc(cv))
+        return KVCache(attn_mod.i8_encode(cfg, ck), attn_mod.i8_encode(cfg, cv))
     return KVCache(ck.astype(cfg.dtype), cv.astype(cfg.dtype))
+
+
+class _PerSlotPaged:
+    """Paged-mode defaults for blocks whose decode state is dense per-slot
+    (recurrent state, cross-attn ctx_kv): the paged layout keeps the state
+    exactly as the dense layout does — documented exception in DESIGN.md §14
+    (recurrent state is O(1) per slot; there is nothing block-granular to
+    page)."""
+
+    paged_kv = False
+
+    @classmethod
+    def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
+                         abstract):
+        return cls.state_spec(cfg, batch, s_max, abstract)
+
+    @classmethod
+    def paged_split(cls, state):
+        """-> (shared pool leaves, per-slot leaves)."""
+        return None, state
+
+    @classmethod
+    def paged_merge(cls, shared, per_slot):
+        return per_slot
 
 
 class AttnBlock:
     kind = "attn"
     causal = True
     window = 0
+    paged_kv = True
 
     @classmethod
     def defs(cls, cfg, n):
         return _attn_ffn_defs(cfg, n)
 
     @classmethod
-    def _ffn(cls, cfg, p, x):
+    def _ffn(cls, cfg, p, x, valid=None):
         h = layers.rms_norm(x, p["ln2"])
         return x + layers.ffn(cfg, _sub(p, "ffn_"), h), jnp.float32(0.0)
 
@@ -135,13 +164,31 @@ class AttnBlock:
         return x, aux, state
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         h = layers.rms_norm(x, p["ln1"])
         win = cfg.local_window if cls.window else 0
-        y, state = attn_mod.decode_attention(cfg, _sub(p, "attn_"), h, state,
-                                             pos, window=win)
+        if table is not None:
+            y, state = attn_mod.paged_attention(cfg, _sub(p, "attn_"), h,
+                                                state, table, pos, window=win,
+                                                valid=valid)
+        else:
+            y, state = attn_mod.decode_attention(cfg, _sub(p, "attn_"), h,
+                                                 state, pos, window=win)
         x = x + y
         x, _ = cls._ffn(cfg, p, x)
+        return x, state
+
+    @classmethod
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        """One chunked-prefill piece: x (1, C, d) at positions
+        pos0..pos0+C-1, of which the first ``n_valid`` are real tokens."""
+        h = layers.rms_norm(x, p["ln1"])
+        win = cfg.local_window if cls.window else 0
+        y, state = attn_mod.paged_attention(cfg, _sub(p, "attn_"), h, state,
+                                            table, pos0, window=win,
+                                            valid=valid)
+        x = x + y
+        x, _ = cls._ffn(cfg, p, x, valid=valid)
         return x, state
 
     @classmethod
@@ -150,6 +197,21 @@ class AttnBlock:
         mk = KVCache.abstract if abstract else KVCache.zeros
         dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
         return mk(cfg, batch, cap, dtype=dt)
+
+    @classmethod
+    def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
+                         abstract):
+        mk = PagedKVCache.abstract if abstract else PagedKVCache.zeros
+        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
+        return mk(cfg, n_blocks, block_size, dtype=dt)
+
+    @classmethod
+    def paged_split(cls, state):
+        return state, None
+
+    @classmethod
+    def paged_merge(cls, shared, per_slot):
+        return shared
 
     @classmethod
     def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
@@ -181,13 +243,13 @@ class MoeBlock(AttnBlock):
         return _attn_ffn_defs(cfg, n, moe_ffn_=True)
 
     @classmethod
-    def _ffn(cls, cfg, p, x):
+    def _ffn(cls, cfg, p, x, valid=None):
         h = layers.rms_norm(x, p["ln2"])
-        y, aux = moe.moe_ffn(cfg, _sub(p, "moe_"), h)
+        y, aux = moe.moe_ffn(cfg, _sub(p, "moe_"), h, valid=valid)
         return x + y, aux
 
 
-class CrossBlock:
+class CrossBlock(_PerSlotPaged):
     kind = "cross"
 
     @classmethod
@@ -206,12 +268,25 @@ class CrossBlock:
         return x, jnp.float32(0.0), state
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         h = layers.rms_norm(x, p["ln1"])
         x = x + attn_mod.decode_cross_attention(cfg, _sub(p, "attn_"), h, state)
         h = layers.rms_norm(x, p["ln2"])
         x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
         return x, state
+
+    @classmethod
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        # ctx_kv is recomputed from the per-request context each chunk (the
+        # dense fwd recomputes it per forward too) and stored as the slot's
+        # state so decode can read it without the raw ctx staying resident.
+        ap = _sub(p, "attn_")
+        ctx_kv = attn_mod.make_ctx_kv(cfg, ap, ctx)
+        h = layers.rms_norm(x, p["ln1"])
+        x = x + attn_mod.cross_attention(cfg, ap, h, ctx_kv)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        return x, ctx_kv
 
     @classmethod
     def state_spec(cls, cfg, batch, s_max, abstract):
@@ -258,11 +333,16 @@ class DecBlock:
         return x, jnp.float32(0.0), state
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         self_cache, ctx_kv = state
         h = layers.rms_norm(x, p["ln1"])
-        y, self_cache = attn_mod.decode_attention(cfg, _sub(p, "attn_"), h,
-                                                  self_cache, pos)
+        if table is not None:
+            y, self_cache = attn_mod.paged_attention(cfg, _sub(p, "attn_"),
+                                                     h, self_cache, table,
+                                                     pos, valid=valid)
+        else:
+            y, self_cache = attn_mod.decode_attention(cfg, _sub(p, "attn_"),
+                                                      h, self_cache, pos)
         x = x + y
         h = layers.rms_norm(x, p["lnx"])
         x = x + attn_mod.decode_cross_attention(cfg, _sub(p, "xattn_"), h, ctx_kv)
@@ -271,14 +351,57 @@ class DecBlock:
         return x, (self_cache, ctx_kv)
 
     @classmethod
-    def state_spec(cls, cfg, batch, s_max, abstract):
-        mk = KVCache.abstract if abstract else KVCache.zeros
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        """ctx here is the *encoded* encoder output (1, T, d) — encoded once
+        at admission, not once per chunk."""
+        self_cache, _ = state
+        h = layers.rms_norm(x, p["ln1"])
+        y, self_cache = attn_mod.paged_attention(cfg, _sub(p, "attn_"), h,
+                                                 self_cache, table, pos0,
+                                                 valid=valid)
+        x = x + y
+        xp = _sub(p, "xattn_")
+        ctx_kv = attn_mod.make_ctx_kv(cfg, xp, ctx)
+        h = layers.rms_norm(x, p["lnx"])
+        x = x + attn_mod.cross_attention(cfg, xp, h, ctx_kv)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        return x, (self_cache, ctx_kv)
+
+    @classmethod
+    def _ctx_kv_spec(cls, cfg, batch, abstract):
         shp = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.d_head)
         if abstract:
-            ctx_kv = (jax.ShapeDtypeStruct(shp, cfg.dtype),) * 2
-        else:
-            ctx_kv = (jnp.zeros(shp, cfg.dtype), jnp.zeros(shp, cfg.dtype))
-        return (mk(cfg, batch, s_max), ctx_kv)
+            return (jax.ShapeDtypeStruct(shp, cfg.dtype),) * 2
+        return (jnp.zeros(shp, cfg.dtype), jnp.zeros(shp, cfg.dtype))
+
+    @classmethod
+    def state_spec(cls, cfg, batch, s_max, abstract):
+        mk = KVCache.abstract if abstract else KVCache.zeros
+        # the self-cache honors kv_cache_dtype like AttnBlock's (the i8
+        # words _kv_from_seq produces must land in an i8 resident cache or
+        # decode_attention skips the fixed-point correction)
+        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
+        return (mk(cfg, batch, s_max, dtype=dt),
+                cls._ctx_kv_spec(cfg, batch, abstract))
+
+    paged_kv = True
+
+    @classmethod
+    def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
+                         abstract):
+        mk = PagedKVCache.abstract if abstract else PagedKVCache.zeros
+        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
+        return (mk(cfg, n_blocks, block_size, dtype=dt),
+                cls._ctx_kv_spec(cfg, batch, abstract))
+
+    @classmethod
+    def paged_split(cls, state):
+        return state[0], state[1]
+
+    @classmethod
+    def paged_merge(cls, shared, per_slot):
+        return (shared, per_slot)
 
     @classmethod
     def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
@@ -290,7 +413,7 @@ class DecBlock:
 # recurrent blocks
 # ---------------------------------------------------------------------------
 
-class RglruBlock:
+class RglruBlock(_PerSlotPaged):
     kind = "rglru"
 
     @classmethod
@@ -340,7 +463,7 @@ class RglruBlock:
         return x, jnp.float32(0.0), state
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         st, buf = state
         h = layers.rms_norm(x, p["ln1"])
         g, u = cls._mix(cfg, p, h)
@@ -352,6 +475,21 @@ class RglruBlock:
         h = layers.rms_norm(x, p["ln2"])
         x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
         return x, (st, buf.astype(cfg.dtype))
+
+    @classmethod
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        st, buf = state
+        h = layers.rms_norm(x, p["ln1"])
+        g, u = cls._mix(cfg, p, h)
+        uc = ssm.conv1d_carry(buf, u, p["conv_k"])
+        r = layers.linear(uc, p["w_r"], cfg.quant)
+        i = layers.linear(uc, p["w_i"], cfg.quant)
+        y, st = ssm.rglru(uc, r, i, p["lam"], cfg.rglru_c, st, valid=valid)
+        x = x + layers.linear(g * y, p["w_out"], cfg.quant)
+        h = layers.rms_norm(x, p["ln2"])
+        x = x + layers.ffn(cfg, _sub(p, "ffn_"), h)
+        buf = ssm.conv1d_carry_out(buf, u, n_valid).astype(cfg.dtype)
+        return x, (st, buf)
 
     @classmethod
     def state_spec(cls, cfg, batch, s_max, abstract):
@@ -367,7 +505,7 @@ class RglruBlock:
         return (ssm.RGLRUState(P(ba, "model")), P(ba, None, "model"))
 
 
-class MlstmBlock:
+class MlstmBlock(_PerSlotPaged):
     kind = "mlstm"
 
     @classmethod
@@ -439,7 +577,7 @@ class MlstmBlock:
         return x, jnp.float32(0.0), state
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         st, buf = state
         b = x.shape[0]
         di, nh = cls._di(cfg), cfg.n_heads
@@ -455,6 +593,29 @@ class MlstmBlock:
         hstep = layers.rms_norm(hstep, p["out_norm"]) * jax.nn.silu(z)
         x = x + layers.linear(hstep, p["w_down"], cfg.quant)
         return x, (st, buf.astype(cfg.dtype))
+
+    @classmethod
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        st, buf = state
+        b, c, _ = x.shape
+        di = cls._di(cfg)
+        h = layers.rms_norm(x, p["ln1"])
+        u = layers.linear(h, p["w_up"], cfg.quant)
+        z = layers.linear(h, p["w_gate"], cfg.quant)
+        uc = jax.nn.silu(ssm.conv1d_carry(buf, u, p["conv_k"]))
+        q, k, v, ig, fg = cls._qkvif(cfg, p, u, uc)
+        # state-neutral gates at padding positions (i = -inf: nothing
+        # inserted; f = +inf: no decay) — the same trick mlstm_chunkwise
+        # uses for its own ragged tails, so the boundary state is exact.
+        ig = jnp.where(valid[..., None], ig, -1e30)
+        fg = jnp.where(valid[..., None], fg, 1e30)
+        hseq, st = ssm.mlstm_chunkwise(q, k, v, ig, fg, st,
+                                       min(cfg.mlstm_chunk, c))
+        hseq = hseq.reshape(b, c, di).astype(x.dtype)
+        hseq = layers.rms_norm(hseq, p["out_norm"]) * jax.nn.silu(z)
+        x = x + layers.linear(hseq, p["w_down"], cfg.quant)
+        buf = ssm.conv1d_carry_out(buf, u, n_valid).astype(cfg.dtype)
+        return x, (st, buf)
 
     @classmethod
     def state_spec(cls, cfg, batch, s_max, abstract):
@@ -475,7 +636,7 @@ class MlstmBlock:
                 P(ba, None, "model"))
 
 
-class SlstmBlock:
+class SlstmBlock(_PerSlotPaged):
     kind = "slstm"
 
     @classmethod
@@ -518,11 +679,21 @@ class SlstmBlock:
         return x, jnp.float32(0.0), (st if opts.want_state else None)
 
     @classmethod
-    def decode(cls, cfg, p, x, state, pos, ctx):
+    def decode(cls, cfg, p, x, state, pos, ctx, table=None, valid=None):
         h = layers.rms_norm(x, p["ln1"])
         gates = layers.linear(h, p["w_gates"], cfg.quant)
         state, y = ssm.slstm_step(state, gates[:, 0], p["r_kernel"], cfg.n_heads)
         x = x + y[:, None].astype(x.dtype)
+        x = cls._post_ffn(cfg, p, x)
+        return x, state
+
+    @classmethod
+    def chunk(cls, cfg, p, x, state, pos0, valid, n_valid, ctx, table):
+        h = layers.rms_norm(x, p["ln1"])
+        gates = layers.linear(h, p["w_gates"], cfg.quant)
+        y, state = ssm.slstm_sequence(gates, p["r_kernel"], state,
+                                      cfg.n_heads, valid=valid)
+        x = x + y.astype(x.dtype)
         x = cls._post_ffn(cfg, p, x)
         return x, state
 
@@ -589,15 +760,50 @@ def segment_fwd(cfg, seg_params: list, x, ctx=None,
     return x, aux_total, states
 
 
+def _block_table(block, tables):
+    """The block's (B, W) table under paged serving, else None."""
+    if tables is None or not getattr(block, "paged_kv", False):
+        return None
+    return tables["win" if getattr(block, "window", 0) else "full"]
+
+
+def _freeze_inactive(block, old, new, active):
+    """Keep inactive slots' per-slot state frozen across a decode step.
+
+    Needed once chunked prefill interleaves with decode: a mid-prefill
+    slot is in the batch with ``active=False`` and its recurrent carry
+    must not advance on the garbage token it is fed.  Shared pool leaves
+    pass through (their writes are trash-routed via ``valid``); dense-mode
+    KVCache leaves are classified shared too, which is correct — dead rows
+    there are inert by overwrite, the historical §13 behavior."""
+    shared, ps_new = block.paged_split(new)
+    if ps_new is None:
+        return new
+    _, ps_old = block.paged_split(old)
+    sel = lambda nw, ol: jnp.where(
+        active.reshape((1, -1) + (1,) * (nw.ndim - 2)), nw, ol)
+    return block.paged_merge(shared, jax.tree.map(sel, ps_new, ps_old))
+
+
 def segment_decode(cfg, seg_params: list, x, states: list, pos, ctx=None,
-                   unroll: bool = False):
+                   unroll: bool = False, tables: dict | None = None,
+                   active=None):
+    """``tables`` switches attn-family blocks to the paged gather/scatter
+    path: {"full": (B, W), "win": (B, W)} per-slot block tables (DESIGN.md
+    §14); their states are then shared PagedKVCache pools.  ``active``
+    (B,) bool additionally freezes inactive slots' per-slot state and
+    trash-routes their KV writes (mid-prefill slots share the decode
+    batch)."""
+    valid = None if active is None else active[:, None]
     new_states = []
     for ((kind, n), p), st in zip(seg_params, states):
         block = KINDS[kind]
+        table = _block_table(block, tables)
 
-        def body(xc, pst, _block=block):
+        def body(xc, pst, _block=block, _table=table):
             pl, stl = pst
-            xn, stn = _block.decode(cfg, pl, xc, stl, pos, ctx)
+            xn, stn = _block.decode(cfg, pl, xc, stl, pos, ctx, table=_table,
+                                    valid=valid)
             return xn, stn
 
         if unroll:
@@ -609,7 +815,57 @@ def segment_decode(cfg, seg_params: list, x, states: list, pos, ctx=None,
             stn = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
         else:
             x, stn = jax.lax.scan(body, x, (p, st))
+        if active is not None:
+            stn = _freeze_inactive(block, st, stn, active)
         new_states.append(stn)
+    return x, new_states
+
+
+def segment_chunk(cfg, seg_params: list, x, states: list, slot, pos0,
+                  valid, n_valid, ctx=None, tables: dict | None = None,
+                  fresh=None):
+    """One chunked-prefill piece through every segment (B=1, S=C).
+
+    Per-slot dense leaves (recurrent state, ctx_kv) are sliced out for
+    ``slot``, optionally reset to their initial values when ``fresh`` (the
+    request's first chunk overwrites whatever the previous tenant left),
+    run through the chunk, and scattered back; shared PagedKVCache pools
+    pass through whole (the block table confines writes to this slot's
+    blocks).  ``tables`` rows here are (1, W) — just this slot's row.
+    """
+    new_states = []
+    for ((kind, n), p), st in zip(seg_params, states):
+        block = KINDS[kind]
+        table = _block_table(block, tables)
+        shared, per_slot = block.paged_split(st)
+        ps_slot = None
+        if per_slot is not None:
+            ps_slot = jax.tree.map(
+                lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+                per_slot)
+            if fresh is not None:
+                one = block.paged_state_spec(cfg, 1, 0, 0, 0, False)
+                _, init = block.paged_split(one)
+                init = jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), init)
+                ps_slot = jax.tree.map(
+                    lambda i, l: jnp.where(fresh, i.astype(l.dtype), l),
+                    init, ps_slot)
+
+        def body(xc, pst, _block=block, _table=table):
+            pl, sh_l, ps_l = pst
+            st_l = _block.paged_merge(sh_l, ps_l)
+            xn, st_n = _block.chunk(cfg, pl, xc, st_l, pos0, valid, n_valid,
+                                    ctx, _table)
+            return xn, _block.paged_split(st_n)
+
+        x, (sh_new, ps_new) = jax.lax.scan(body, x, (p, shared, ps_slot))
+        if per_slot is not None:
+            ps_new = jax.tree.map(
+                lambda full_l, new_l: jax.lax.dynamic_update_slice_in_dim(
+                    full_l, new_l.astype(full_l.dtype), slot, axis=1),
+                per_slot, ps_new)
+        new_states.append(block.paged_merge(sh_new, ps_new))
     return x, new_states
 
 
@@ -619,6 +875,27 @@ def segment_states(cfg, segments, batch, s_max, abstract: bool):
     for kind, n in segments:
         block = KINDS[kind]
         one = block.state_spec(cfg, batch, s_max, abstract)
+        if abstract:
+            stacked = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), one)
+        else:
+            stacked = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), one)
+        out.append(stacked)
+    return out
+
+
+def segment_paged_states(cfg, segments, batch, s_max, n_blocks: int,
+                         block_size: int, abstract: bool):
+    """Paged decode states per segment: attn-family KV caches become shared
+    ``(n, n_blocks, KV, block_size, dh)`` pools (stacked per layer, no batch
+    axis); recurrent / ctx_kv leaves keep the dense ``(n, batch, ...)``
+    layout (DESIGN.md §14)."""
+    out = []
+    for kind, n in segments:
+        block = KINDS[kind]
+        one = block.paged_state_spec(cfg, batch, s_max, n_blocks, block_size,
+                                     abstract)
         if abstract:
             stacked = jax.tree.map(
                 lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), one)

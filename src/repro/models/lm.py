@@ -190,6 +190,46 @@ def decode_state_spec(cfg, batch: int, s_max: int, abstract: bool = True,
     return DecodeState(pos, tuple(seg_states), ctx)
 
 
+def paged_table_widths(cfg, s_max: int, block_size: int,
+                       prefill_chunk: int) -> dict:
+    """Block-table widths per cache class for the paged serve layout.
+
+    ``"full"`` covers attn/moe/dec self-caches (monotone tables of
+    ``ceil(s_max / bs)`` blocks); ``"win"`` covers local sliding-window
+    layers — a block *ring* whose capacity ``W * bs >= window + C - 1``
+    guarantees that scatter-then-attend chunked prefill (chunk size C)
+    never overwrites an in-window key.  Archs with no KV cache at all
+    (pure recurrent) return {}.
+    """
+    kinds = {k for k, _ in cfg.segments()}
+    bs = block_size
+    widths = {}
+    if kinds & {"attn", "moe", "dec"}:
+        widths["full"] = -(-s_max // bs)
+    if "local" in kinds:
+        cap = min(s_max, cfg.local_window + max(prefill_chunk, 1) - 1)
+        widths["win"] = -(-cap // bs)
+    return widths
+
+
+def paged_decode_state_spec(cfg, batch: int, s_max: int, *, n_blocks: int,
+                            block_size: int, abstract: bool = True):
+    """The block-paged resident serving state (DESIGN.md §14).
+
+    Attn-family KV caches are shared ``(n_blocks, KV, block_size, dh)``
+    pools addressed through host-owned per-slot block tables; ``pos`` is
+    per-slot; recurrent per-slot state stays dense (it is O(1) per slot).
+    ``ctx`` is never kept resident — chunked prefill receives the modality
+    context as a program input and stores the derived ctx_kv per slot.
+    """
+    seg_states = blocks.segment_paged_states(cfg, cfg.segments(), batch,
+                                             s_max, n_blocks, block_size,
+                                             abstract)
+    pos = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+           else jnp.zeros((batch,), jnp.int32))
+    return DecodeState(pos, tuple(seg_states), None)
+
+
 def decode_state_pspecs(cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
     """PartitionSpecs mirroring decode_state_spec (ba = batch mesh axes)."""
     from jax.sharding import PartitionSpec as P
@@ -238,3 +278,56 @@ def decode_step(cfg, params, token: jnp.ndarray, state: DecodeState,
     logits = layers.logits(cfg, params["embed"], x)
     inc = 1 if active is None else active.astype(jnp.int32)
     return logits, DecodeState(state.pos + inc, tuple(new_states), state.ctx)
+
+
+def paged_decode_step(cfg, params, token: jnp.ndarray, state: DecodeState,
+                      tables: dict, active: jnp.ndarray | None = None):
+    """One token for every slot against the block-paged resident state.
+
+    ``tables`` {"full"/"win": (B, W) int32} are host-owned device data —
+    they change as blocks are allocated and freed without ever retracing.
+    ``active`` additionally gates the paged batch's inactive rows: their
+    per-slot recurrent state freezes and their KV writes are trash-routed,
+    so a mid-prefill slot (chunked prefill interleaves with decode) rides
+    along inertly; dead slots' table rows are zeroed by the host as well.
+    """
+    x = layers.embed(params["embed"], token).astype(cfg.dtype)
+    x, new_states = blocks.segment_decode(cfg, _seg_params(cfg, params), x,
+                                          list(state.seg_states), state.pos,
+                                          state.ctx, tables=tables,
+                                          active=active)
+    logits = layers.logits(cfg, params["embed"], x)
+    inc = 1 if active is None else active.astype(jnp.int32)
+    return logits, DecodeState(state.pos + inc, tuple(new_states), state.ctx)
+
+
+def prefill_chunk_step(cfg, params, tokens: jnp.ndarray, state: DecodeState,
+                       slot, n_valid, tables: dict,
+                       ctx: jnp.ndarray | None = None, fresh=None):
+    """One chunked-prefill piece for resident slot ``slot``.
+
+    tokens (1, C) — positions ``pos0 .. pos0+C-1`` of the prompt with
+    ``pos0 = state.pos[slot]`` when continuing (``fresh`` false) and 0 when
+    the slot was just admitted; only the first ``n_valid`` tokens are real,
+    the rest are padding (every prompt runs through this one program in
+    fixed-C pieces — one trace for the whole mixed-length workload).
+    ``ctx`` is the request's modality context: *encoded* frames for enc-dec
+    archs (:func:`encode` runs once at admission), raw patch embeddings for
+    vlm.  ``tables`` rows are this slot's (1, W) block-table rows.
+    Returns (logits of the last valid position (1, 1, V), new state).
+    """
+    c = tokens.shape[1]
+    pos0 = jnp.where(jnp.asarray(fresh if fresh is not None else False),
+                     0, state.pos[slot]).astype(jnp.int32)
+    valid = (jnp.arange(c) < n_valid)[None]                    # (1, C)
+    x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+    if ctx is not None:
+        ctx = ctx.astype(cfg.dtype)
+    x, new_states = blocks.segment_chunk(cfg, _seg_params(cfg, params), x,
+                                         list(state.seg_states), slot, pos0,
+                                         valid, n_valid, ctx, tables,
+                                         fresh=fresh)
+    xlast = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = layers.logits(cfg, params["embed"], xlast)
+    pos = state.pos.at[slot].set(pos0 + n_valid)
+    return logits, DecodeState(pos, tuple(new_states), state.ctx)

@@ -43,8 +43,13 @@ def capacity(cfg, tg: int) -> int:
     return max(1, int(tg * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
 
 
-def moe_ffn(cfg, p: dict, x: jnp.ndarray):
-    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+def moe_ffn(cfg, p: dict, x: jnp.ndarray, valid: jnp.ndarray | None = None):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    ``valid`` (B, S) bool excludes padding tokens (chunked-prefill ragged
+    tails) from routing entirely: they occupy no expert capacity, their
+    combine weight is zero, and the aux loss ignores them.
+    """
     b, s, d = x.shape
     tg = min(group_len(cfg), s)
     assert (b * s) % tg == 0, (b, s, tg)
@@ -60,6 +65,8 @@ def moe_ffn(cfg, p: dict, x: jnp.ndarray):
     e, k = cfg.n_experts, cfg.top_k
     c = capacity(cfg, tg)
     mask = jax.nn.one_hot(idx, e, dtype=F32)                     # (G, T, k, E)
+    if valid is not None:
+        mask = mask * valid.reshape(g, tg)[:, :, None, None].astype(F32)
     # position of each (token, choice) within its expert queue; choices of
     # earlier tokens and earlier k-slots go first (choice-major priority).
     prio = jnp.moveaxis(mask, 2, 1).reshape(g, k * tg, e)
@@ -82,8 +89,15 @@ def moe_ffn(cfg, p: dict, x: jnp.ndarray):
     y = jnp.einsum("gtec,egcd->gtd", combine.astype(ye.dtype), ye)
     y = constrain(y, "batch", None, None)
 
-    # Switch/GShard load-balancing loss: E * sum_e f_e * P_e
-    f_e = jnp.mean(mask[:, :, 0, :], axis=(0, 1))                # top-1 fraction
-    p_e = jnp.mean(probs, axis=(0, 1))
+    # Switch/GShard load-balancing loss: E * sum_e f_e * P_e (means over
+    # valid tokens only — padding must pollute neither factor)
+    if valid is not None:
+        v = valid.reshape(g, tg, 1).astype(F32)
+        denom = jnp.maximum(jnp.sum(v), 1.0)
+        f_e = jnp.sum(mask[:, :, 0, :], axis=(0, 1)) / denom
+        p_e = jnp.sum(probs * v, axis=(0, 1)) / denom
+    else:
+        f_e = jnp.mean(mask[:, :, 0, :], axis=(0, 1))            # top-1 frac
+        p_e = jnp.mean(probs, axis=(0, 1))
     aux = cfg.n_experts * jnp.sum(f_e * p_e)
     return y.reshape(b, s, d).astype(x.dtype), aux

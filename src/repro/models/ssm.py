@@ -36,6 +36,26 @@ def conv1d(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
                for i in range(w))
 
 
+def conv1d_carry(buf: jnp.ndarray, x: jnp.ndarray, kernel: jnp.ndarray):
+    """Chunked-prefill form: like :func:`conv1d` but the left context is the
+    ``(B, W-1, D)`` carry buffer from the previous chunk instead of zeros
+    (identical to conv1d when ``buf`` is zero — the fresh-slot case)."""
+    w = kernel.shape[0]
+    xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    return sum(xp[:, i:i + s] * kernel[w - 1 - i].astype(x.dtype)
+               for i in range(w))
+
+
+def conv1d_carry_out(buf: jnp.ndarray, x: jnp.ndarray, valid_len):
+    """New carry buffer after a chunk: the last W-1 *valid* inputs.  With
+    ``valid_len`` < W-1 the tail of the old buffer is retained (padding
+    tokens at the chunk end never enter the history)."""
+    w1 = buf.shape[1]
+    hist = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    return jax.lax.dynamic_slice_in_dim(hist, valid_len, w1, axis=1)
+
+
 def conv1d_step(buf: jnp.ndarray, x: jnp.ndarray, kernel: jnp.ndarray):
     """Decode step. buf (B, W-1, D) holds previous inputs; x (B, 1, D).
     Returns (y (B, 1, D), new buf)."""
@@ -217,11 +237,26 @@ def slstm_step(state: SLSTMState, x_gates, r_kernel, nh: int):
     return SLSTMState(c, n, m_new, h), h
 
 
-def slstm_sequence(x_gates, r_kernel, state: SLSTMState, nh: int):
-    """x_gates (B, S, 4D) -> h (B, S, D). True recurrence: lax.scan over S."""
-    def step(st, xg):
-        return slstm_step(st, xg, r_kernel, nh)
-    state, hs = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+def slstm_sequence(x_gates, r_kernel, state: SLSTMState, nh: int,
+                   valid: jnp.ndarray | None = None):
+    """x_gates (B, S, 4D) -> h (B, S, D). True recurrence: lax.scan over S.
+
+    ``valid`` (B, S) bool gates the state update per step (chunked prefill:
+    padding tokens at the chunk end pass the state through unchanged)."""
+    if valid is None:
+        def step(st, xg):
+            return slstm_step(st, xg, r_kernel, nh)
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+    else:
+        def step(st, xs):
+            xg, vt = xs
+            new, h = slstm_step(st, xg, r_kernel, nh)
+            keep = vt[:, None]
+            new = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new, st)
+            return new, h
+        state, hs = jax.lax.scan(step, state,
+                                 (jnp.moveaxis(x_gates, 1, 0),
+                                  jnp.moveaxis(valid, 1, 0)))
     return jnp.moveaxis(hs, 0, 1), state
 
 
@@ -242,17 +277,24 @@ class RGLRUState(NamedTuple):
 
 
 def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
-          lam: jnp.ndarray, c: float, state: RGLRUState):
+          lam: jnp.ndarray, c: float, state: RGLRUState,
+          valid: jnp.ndarray | None = None):
     """Sequence form via associative scan (log-depth).
 
     x, r_gate, i_gate: (B, S, D) (gates are pre-sigmoid); lam: (D,) raw Λ.
     h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
     a_t = exp(-c * softplus(lam) * sigmoid(r_t)).
+    ``valid`` (B, S) bool forces padding steps to the exact identity
+    (a_t = 1, b_t = 0), so the boundary state of a ragged chunked-prefill
+    piece equals the unpadded state.
     """
     log_a = (-c * jax.nn.softplus(lam.astype(F32))
              * jax.nn.sigmoid(r_gate.astype(F32)))            # (B, S, D)
-    a = jnp.exp(log_a)
     gated = jax.nn.sigmoid(i_gate.astype(F32)) * x.astype(F32)
+    if valid is not None:
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
+        gated = jnp.where(valid[..., None], gated, 0.0)
+    a = jnp.exp(log_a)
     b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
 
     def combine(left, right):

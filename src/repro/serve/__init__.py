@@ -1,13 +1,16 @@
-"""Continuous-batching XNOR serve engine (DESIGN.md §13).
+"""Continuous-batching XNOR serve engine (DESIGN.md §13–§14).
 
 Public surface:
   Request / Session / synthetic_trace — the request model,
-  SlotPool                            — pure scheduling bookkeeping,
-  ServeEngine / ServeReport           — the engine itself.
+  SlotPool / BlockPool                — pure scheduling bookkeeping (slots,
+                                        paged-KV block allocation),
+  ServeEngine / ServeReport           — the engine itself,
+  EngineStats                         — counters incl. block occupancy.
 """
 
-from repro.serve.scheduler import ServeEngine, ServeReport, SlotPool
+from repro.serve.scheduler import (BlockPool, EngineStats, ServeEngine,
+                                   ServeReport, SlotPool)
 from repro.serve.session import Request, Session, synthetic_trace
 
-__all__ = ["Request", "ServeEngine", "ServeReport", "Session", "SlotPool",
-           "synthetic_trace"]
+__all__ = ["BlockPool", "EngineStats", "Request", "ServeEngine",
+           "ServeReport", "Session", "SlotPool", "synthetic_trace"]

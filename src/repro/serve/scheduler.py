@@ -1,4 +1,4 @@
-"""Continuous-batching decode engine (DESIGN.md §13).
+"""Continuous-batching decode engine (DESIGN.md §13–§14).
 
 The paper's application regime — binary filters resident in the CiM array,
 XNOR-popcount as the serve-time inner loop — needs a *request-level* engine
@@ -6,23 +6,36 @@ on top of the token-level serve path.  This module provides it:
 
 * a FIFO request queue and a fixed pool of batch **slots** over one resident
   :class:`repro.models.lm.DecodeState` (per-slot position vector);
-* **admission**: a freed slot is immediately refilled — the new request is
-  prefilled (exact prompt length, batch 1) and its per-layer state scattered
-  into the resident batch, interleaved with decode;
-* **eviction** on EOS or max-token budget: the slot is marked free, its
-  device state left in place (dead rows are inert: position frozen via the
-  active mask, overwritten by the next admission);
+* a **block-paged KV cache** (default, DESIGN.md §14): attention state
+  lives in a shared block pool addressed through host-owned per-slot block
+  tables (:class:`BlockPool` allocates; tables are device *data*), so cache
+  memory is proportional to tokens actually held, not ``slots x s_max``;
+  ``paged=False`` keeps the slot-dense layout — the two are
+  token-identical (MoE excepted, see §14);
+* **admission**: a freed slot is immediately refilled.  Paged: the
+  request's worst-case blocks are reserved (OOM backpressure holds the
+  FIFO head otherwise) and the prompt is consumed by **chunked prefill** —
+  fixed ``prefill_chunk``-sized pieces through ONE jitted program, so
+  prefill compiles once for any prompt-length mix and long prompts
+  interleave with decode in bounded slices.  Dense: exact-length batch-1
+  prefill scattered into the slot (one trace per distinct length);
+* **eviction** on EOS or max-token budget: the slot is marked free and its
+  blocks return to the pool; dead rows are inert (position frozen via the
+  active mask, table rows zeroed so frozen re-writes land in the reserved
+  trash block);
 * **one jitted decode program** for the whole run: position vector, active
-  mask, sampling seeds are device *data*, never trace constants, so slots
-  joining/leaving never retrace.  Prefill traces once per distinct prompt
-  length (exact lengths — right-padding would corrupt recurrent-arch state).
+  mask, block tables, sampling seeds are device *data*, never trace
+  constants, so slots joining/leaving and blocks moving never retrace.
 
 With ``pack=True`` (default) and a ``quant="xnor"`` arch the resident
 params are the packed form (:func:`repro.models.lm.pack_params`): binary
-filter planes + beta, float weights absent — packed-weight residency.
+filter planes + beta, float weights absent — packed-weight residency (runs
+on both cache layouts).
 
-Scheduling bookkeeping (:class:`SlotPool`) is pure host logic, separated
-from the jitted programs so it is unit-testable without a model.
+Scheduling bookkeeping (:class:`SlotPool`, :class:`BlockPool`) is pure
+host logic, separated from the jitted programs so it is unit-testable
+without a model; :class:`EngineStats` counts steps, traces, and block-pool
+occupancy (peak/mean blocks in use) for the benchmarks.
 """
 
 from __future__ import annotations
@@ -65,6 +78,10 @@ class SlotPool:
     def queued(self) -> int:
         return len(self._queue)
 
+    def peek(self) -> Session | None:
+        """The session the next admit() would pop (FIFO head), or None."""
+        return self._queue[0] if self._queue else None
+
     # -- slot side -----------------------------------------------------------
 
     @property
@@ -101,6 +118,106 @@ class SlotPool:
 
     def idle(self) -> bool:
         return not self._queue and not self._active
+
+
+class BlockPool:
+    """Host allocator for the shared paged-KV block pool (DESIGN.md §14).
+
+    Physical block 0 is the reserved *trash* block — dead-slot and padding
+    writes are routed there and never read — so ids 1..n_blocks-1 are
+    allocatable.  Allocation is lowest-id-first and per-request (free by
+    request id reclaims everything the request held), which keeps the whole
+    engine deterministic for a fixed trace.  Pure host logic, like
+    :class:`SlotPool`, so it is unit-testable without a model.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(
+                f"need at least 2 blocks (block 0 is the reserved trash "
+                f"block), got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free = list(range(1, n_blocks))    # kept sorted ascending
+        self._held: dict[int, list[int]] = {}    # rid -> block ids
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the trash block)."""
+        return self.n_blocks - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, rid: int, n: int) -> list[int]:
+        """n lowest free block ids, charged to request ``rid``."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: request {rid} needs {n} blocks, "
+                f"{len(self._free)} free (admission must gate on available)")
+        ids = self._free[:n]
+        del self._free[:n]
+        self._held.setdefault(rid, []).extend(ids)
+        return ids
+
+    def free(self, rid: int) -> int:
+        """Return every block held by ``rid``; returns how many."""
+        ids = self._held.pop(rid, [])
+        self._free.extend(ids)
+        self._free.sort()
+        return len(ids)
+
+    def held(self, rid: int) -> list[int]:
+        return list(self._held.get(rid, []))
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Engine-side counters, including block-pool occupancy (peak / mean
+    blocks in use) so benchmarks can report memory utilization alongside
+    tok/s.  ``prefill_traces`` counts the distinct prefill programs this
+    engine demanded: actual compilations of the paged engine's per-engine
+    chunk program (pinned to exactly 1 for any mix of prompt lengths), vs
+    one per distinct prompt length on the dense path (whose module-level
+    jit cache may already hold some of them from an earlier engine in the
+    same process — the count is this engine's shape demand, not a process
+    compile count)."""
+
+    decode_steps: int = 0
+    prefills: int = 0
+    prefill_chunks: int = 0
+    prefill_traces: int = 0
+    decode_traces: int = 0
+    blocks_total: int = 0       # allocatable blocks (0: dense layout)
+    blocks_in_use: int = 0
+    blocks_peak: int = 0
+    _block_sum: int = 0
+    _block_samples: int = 0
+
+    def observe_blocks(self, in_use: int) -> None:
+        self.blocks_in_use = in_use
+        self.blocks_peak = max(self.blocks_peak, in_use)
+        self._block_sum += in_use
+        self._block_samples += 1
+
+    @property
+    def blocks_mean(self) -> float:
+        if not self._block_samples:
+            return 0.0
+        return self._block_sum / self._block_samples
+
+    @property
+    def block_utilization(self) -> float:
+        """Mean fraction of the pool in use (0 when dense)."""
+        if not self.blocks_total:
+            return 0.0
+        return self.blocks_mean / self.blocks_total
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +279,20 @@ def _insert_program(resident: lm.DecodeState, one: lm.DecodeState, slot):
     return lm.DecodeState(pos, seg, ctx)
 
 
+@dataclasses.dataclass
+class _PrefillProgress:
+    """Host bookkeeping for one slot's in-flight chunked prefill."""
+
+    session: Session
+    padded: np.ndarray          # prompt zero-padded to n_chunks * C
+    p_len: int
+    n_chunks: int
+    next_chunk: int
+    ctx: Any                    # encoded (enc-dec) / raw (vlm) ctx, or None
+    seeds: Any                  # (1,) device seeds for the prefill sample
+    rows: dict                  # this slot's (1, W) block-table rows
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -175,6 +306,7 @@ class ServeReport:
     wall: float
     decode_steps: int
     prefills: int
+    stats: EngineStats | None = None
 
     @property
     def generated(self) -> int:
@@ -187,11 +319,24 @@ class ServeReport:
     def tokens(self, rid: int) -> np.ndarray:
         return np.asarray(self.sessions[rid].tokens, np.int32)
 
-    def latency_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
-        lats = sorted(s.latency for s in self.sessions.values())
-        if not lats:
+    def _quantiles(self, values, qs) -> dict[float, float]:
+        vals = [v for v in values if v == v]       # drop NaN (in-flight)
+        if not vals:
             return {q: 0.0 for q in qs}
-        return {q: float(np.quantile(lats, q)) for q in qs}
+        return {q: float(np.quantile(vals, q)) for q in qs}
+
+    def latency_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
+        return self._quantiles((s.latency for s in self.sessions.values()), qs)
+
+    def ttft_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
+        """Submit-to-first-token, including time spent queued."""
+        return self._quantiles((s.ttft for s in self.sessions.values()), qs)
+
+    def queue_wait_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
+        """Submit-to-admission: the scheduling share of TTFT, separated so
+        prefill cost and queueing backpressure are distinguishable."""
+        return self._quantiles(
+            (s.queue_wait for s in self.sessions.values()), qs)
 
 
 class ServeEngine:
@@ -215,7 +360,9 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, slots: int, s_max: int,
                  eos_id: int | None = None, temperature: float = 0.0,
-                 seed: int = 0, pack: bool = True):
+                 seed: int = 0, pack: bool = True, paged: bool = True,
+                 block_size: int = 0, prefill_chunk: int = 0,
+                 n_blocks: int = 0):
         self.cfg = cfg
         self.slots = slots
         self.s_max = s_max
@@ -225,15 +372,85 @@ class ServeEngine:
         self.pool = SlotPool(slots)
         self.sessions: dict[int, Session] = {}
         self._key = jax.random.PRNGKey(seed)
-        # the single source of truth for the resident layout is
-        # lm.decode_state_spec (the same tree the dry-run lowers)
-        self._state = lm.decode_state_spec(cfg, slots, s_max, abstract=False,
-                                           per_slot_pos=True)
+        self.paged = bool(paged)
+        self.stats = EngineStats()
+        if self.paged:
+            self.block_size = block_size or cfg.block_size
+            self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
+            self._widths = lm.paged_table_widths(cfg, s_max, self.block_size,
+                                                 self.prefill_chunk)
+            per_slot_worst = sum(self._widths.values())
+            if n_blocks <= 0:
+                # default: enough for every slot at full table width (the
+                # paged layout is then never *smaller* than dense; callers
+                # shrink n_blocks to oversubscribe slots at equal memory)
+                n_blocks = 1 + slots * max(per_slot_worst, 1)
+            self.n_blocks = n_blocks
+            self.blocks = BlockPool(n_blocks) if self._widths else None
+            self.stats.blocks_total = n_blocks - 1 if self.blocks else 0
+            # host-owned block tables, mirrored to device on change
+            self._tables = {c: np.zeros((slots, w), np.int32)
+                            for c, w in self._widths.items()}
+            self._dev_tables = None
+            self._state = lm.paged_decode_state_spec(
+                cfg, slots, s_max, n_blocks=n_blocks,
+                block_size=self.block_size, abstract=False)
+            self._build_paged_programs()
+        else:
+            # the single source of truth for the resident layout is
+            # lm.decode_state_spec (the same tree the dry-run lowers)
+            self._state = lm.decode_state_spec(cfg, slots, s_max,
+                                               abstract=False,
+                                               per_slot_pos=True)
+            self._dense_prefill_lens: set[int] = set()
         # host-side mirrors of the device batch (tiny, moved every step)
         self._tokens = np.zeros((slots, 1), np.int32)
         self._active = np.zeros((slots,), bool)
-        self._decode_steps = 0
-        self._prefills = 0
+        # slots mid-chunked-prefill: slot -> _PrefillProgress (paged only;
+        # dense prefill is a single exact-length program, nothing to slice)
+        self._prefilling: dict[int, _PrefillProgress] = {}
+
+    def _build_paged_programs(self):
+        """Per-engine jits so trace counts are observable: the python side
+        effect on ``stats`` runs at trace time only, so ``prefill_traces``
+        counts compilations — the chunked-prefill contract pins it to 1."""
+        cfg, temperature = self.cfg, self.temperature
+
+        def chunk_fn(params, tokens, state, slot, n_valid, tables, ctx,
+                     fresh, key, seeds):
+            self.stats.prefill_traces += 1
+            logits, state = lm.prefill_chunk_step(cfg, params, tokens, state,
+                                                  slot, n_valid, tables, ctx,
+                                                  fresh=fresh)
+            return (_sample_tokens(cfg, logits, key, seeds, temperature),
+                    state)
+
+        def decode_fn(params, tokens, state, tables, active, key, seeds):
+            self.stats.decode_traces += 1
+            logits, state = lm.paged_decode_step(cfg, params, tokens, state,
+                                                 tables, active=active)
+            return (_sample_tokens(cfg, logits, key, seeds, temperature),
+                    state)
+
+        self._chunk_program = jax.jit(chunk_fn, donate_argnums=(2,))
+        self._paged_decode_program = jax.jit(decode_fn, donate_argnums=(2,))
+        self._encode_program = None
+        if cfg.is_encdec():
+            self._encode_program = jax.jit(
+                lambda params, frames: lm.encode(cfg, params, frames))
+
+    def _blocks_per_class(self, prompt_len: int,
+                          max_new_tokens: int) -> dict[str, int]:
+        """Worst-case block reservation per table class for one request:
+        positions 0..P+G-2 are cached, window classes cap at their ring
+        width.  Single source for both the admission gate and the actual
+        allocation — they must never drift apart."""
+        nb = -(-(prompt_len + max_new_tokens - 1) // self.block_size)
+        return {c: min(nb, w) for c, w in self._widths.items()}
+
+    def _blocks_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        return sum(self._blocks_per_class(prompt_len,
+                                          max_new_tokens).values())
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -245,6 +462,14 @@ class ServeEngine:
             raise ValueError(
                 f"request {request.rid} needs {need} cache positions, "
                 f"engine capacity is s_max={self.s_max}")
+        if self.paged and self.blocks is not None:
+            nb = self._blocks_needed(request.prompt.shape[0],
+                                     request.max_new_tokens)
+            if nb > self.blocks.capacity:
+                raise ValueError(
+                    f"request {request.rid} needs {nb} blocks, pool "
+                    f"capacity is {self.blocks.capacity} "
+                    f"(n_blocks={self.n_blocks} incl. trash block)")
         session = Session(request, t_submit=time.monotonic())
         self.sessions[request.rid] = session
         self.pool.submit(session)
@@ -262,50 +487,159 @@ class ServeEngine:
             self._active[slot] = False
             self._tokens[slot] = 0   # dead slots feed a constant token id
                                      # (keeps MoE capacity competition quiet)
+            if self.paged:
+                # eviction returns every block the request held; the zeroed
+                # table row routes the dead slot's frozen re-writes to the
+                # trash block so reallocated blocks are never corrupted
+                if self.blocks is not None:
+                    self.blocks.free(session.request.rid)
+                for t in self._tables.values():
+                    t[slot, :] = 0
+                self._dev_tables = None
+
+    def _ctx_for(self, req: Request):
+        if req.ctx is not None:
+            ctx = jnp.asarray(np.asarray(req.ctx)[None])
+            if self.paged and self.cfg.is_encdec():
+                # encode once at admission; chunks consume the frames
+                ctx = self._encode_program(self.params, ctx)
+            return ctx
+        if self.cfg.n_ctx_tokens:
+            raise ValueError(
+                f"arch {self.cfg.name} needs per-request ctx; request "
+                f"{req.rid} has none")
+        return None
+
+    def _post_prefill(self, session: Session, slot: int, tok) -> bool:
+        """Record the prefill-sampled token; returns True when the request
+        survives into the decode batch."""
+        t = int(np.asarray(tok)[0, 0])
+        session.tokens.append(t)
+        session.t_first = time.monotonic()
+        if self.eos_id is not None and t == self.eos_id:
+            self._finish(session, "eos")
+            return False
+        if session.request.max_new_tokens == 1:
+            self._finish(session, "length")
+            return False
+        self._tokens[slot, 0] = t
+        self._active[slot] = True
+        return True
+
+    def _admissible_paged(self) -> bool:
+        head = self.pool.peek()
+        if head is None or not self.pool.free_slots:
+            return False
+        if self.blocks is None:
+            return True
+        # OOM backpressure: the FIFO head waits (no skipping — determinism
+        # and no starvation) until eviction returns enough blocks
+        return self.blocks.available >= self._blocks_needed(
+            head.request.prompt.shape[0], head.request.max_new_tokens)
+
+    def _slot_table_rows(self, slot: int) -> dict:
+        return {c: jnp.asarray(t[slot:slot + 1])
+                for c, t in self._tables.items()}
+
+    def _admit_paged(self) -> None:
+        """Admission under the block-paged layout: reserve the request's
+        worst-case blocks and queue its chunked prefill.  The chunks
+        themselves are dispatched by :meth:`_prefill_step` — ONE per engine
+        step per admitting slot — so a long prompt interleaves with the
+        decode batch in bounded ``prefill_chunk``-sized slices instead of
+        blocking it head-of-line."""
+        while self._admissible_paged():
+            session, slot = self.pool.admit()
+            req = session.request
+            session.t_admit = time.monotonic()
+            p_len = req.prompt.shape[0]
+            if self.blocks is not None:
+                for cls_name, need in self._blocks_per_class(
+                        p_len, req.max_new_tokens).items():
+                    ids = self.blocks.alloc(req.rid, need)
+                    row = self._tables[cls_name][slot]
+                    row[:] = 0
+                    row[:len(ids)] = ids
+                self._dev_tables = None
+                self.stats.observe_blocks(self.blocks.in_use)
+            c = self.prefill_chunk
+            n_chunks = -(-p_len // c)
+            padded = np.zeros((n_chunks * c,), np.int32)
+            padded[:p_len] = req.prompt
+            self._prefilling[slot] = _PrefillProgress(
+                session=session, padded=padded, p_len=p_len,
+                n_chunks=n_chunks, next_chunk=0, ctx=self._ctx_for(req),
+                seeds=jnp.asarray([self._seed_for(req.rid, 0)], jnp.int32),
+                rows=self._slot_table_rows(slot))
+            self.stats.prefills += 1
+
+    def _prefill_step(self) -> None:
+        """Advance every in-flight chunked prefill by exactly one chunk;
+        a prompt that finishes joins the decode batch this same step."""
+        for slot in sorted(self._prefilling):
+            prog = self._prefilling[slot]
+            c = self.prefill_chunk
+            j = prog.next_chunk
+            piece = jnp.asarray(prog.padded[None, j * c:(j + 1) * c])
+            n_valid = min(c, prog.p_len - j * c)
+            tok, self._state = self._chunk_program(
+                self.params, piece, self._state, jnp.int32(slot),
+                jnp.int32(n_valid), prog.rows, prog.ctx,
+                jnp.asarray(j == 0), self._key, prog.seeds)
+            self.stats.prefill_chunks += 1
+            prog.next_chunk += 1
+            if prog.next_chunk == prog.n_chunks:
+                del self._prefilling[slot]
+                self._post_prefill(prog.session, slot, tok)
 
     def _admit(self) -> None:
         """Fill every free slot from the queue (prefill + scatter insert)."""
+        if self.paged:
+            return self._admit_paged()
         while self.pool.admissible():
             session, slot = self.pool.admit()
             req = session.request
             session.t_admit = time.monotonic()
             tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
-            ctx = None
-            if req.ctx is not None:
-                ctx = jnp.asarray(np.asarray(req.ctx)[None])
-            elif self.cfg.n_ctx_tokens:
-                raise ValueError(
-                    f"arch {self.cfg.name} needs per-request ctx; request "
-                    f"{req.rid} has none")
+            ctx = self._ctx_for(req)
             seeds = jnp.asarray([self._seed_for(req.rid, 0)], jnp.int32)
+            self._dense_prefill_lens.add(req.prompt.shape[0])
+            self.stats.prefill_traces = len(self._dense_prefill_lens)
             tok, one = _prefill_program(
                 self.cfg, self.params, tokens, ctx, self._key, seeds,
                 s_max=self.s_max, temperature=self.temperature)
-            self._prefills += 1
-            t = int(np.asarray(tok)[0, 0])
-            session.tokens.append(t)
-            session.t_first = time.monotonic()
-            if (self.eos_id is not None and t == self.eos_id):
-                self._finish(session, "eos")
-                continue
-            if req.max_new_tokens == 1:
-                self._finish(session, "length")
-                continue
-            self._state = _insert_program(self._state, one, jnp.int32(slot))
-            self._tokens[slot, 0] = t
-            self._active[slot] = True
+            self.stats.prefills += 1
+            if self._post_prefill(session, slot, tok):
+                self._state = _insert_program(self._state, one,
+                                              jnp.int32(slot))
+
+    def _device_tables(self) -> dict:
+        if self._dev_tables is None:
+            self._dev_tables = {c: jnp.asarray(t)
+                                for c, t in self._tables.items()}
+        return self._dev_tables
 
     def _decode_once(self) -> None:
-        """One batched decode step; append/evict per active slot."""
-        active_sessions = self.pool.active          # slot -> session
+        """One batched decode step; append/evict per active slot (slots
+        still mid-prefill ride along inertly and are skipped here)."""
+        active_sessions = {s: sess for s, sess in self.pool.active.items()
+                           if s not in self._prefilling}
         seeds = np.zeros((self.slots,), np.int32)
         for slot, sess in active_sessions.items():
             seeds[slot] = self._seed_for(sess.request.rid, len(sess.tokens))
-        toks, self._state = _decode_program(
-            self.cfg, self.params, jnp.asarray(self._tokens), self._state,
-            jnp.asarray(self._active), self._key, jnp.asarray(seeds),
-            temperature=self.temperature)
-        self._decode_steps += 1
+        if self.paged:
+            toks, self._state = self._paged_decode_program(
+                self.params, jnp.asarray(self._tokens), self._state,
+                self._device_tables(), jnp.asarray(self._active), self._key,
+                jnp.asarray(seeds))
+            if self.blocks is not None:
+                self.stats.observe_blocks(self.blocks.in_use)
+        else:
+            toks, self._state = _decode_program(
+                self.cfg, self.params, jnp.asarray(self._tokens), self._state,
+                jnp.asarray(self._active), self._key, jnp.asarray(seeds),
+                temperature=self.temperature)
+        self.stats.decode_steps += 1
         toks = np.asarray(toks)                     # the per-step sync point
         for slot, sess in active_sessions.items():
             t = int(toks[slot, 0])
@@ -317,9 +651,12 @@ class ServeEngine:
                 self._finish(sess, "length")
 
     def step(self) -> bool:
-        """Admit then decode once; returns False when fully drained."""
+        """Admit, advance in-flight prefills by one chunk each, then decode
+        once; returns False when fully drained."""
         self._admit()
-        if self.pool.active:
+        if self._prefilling:
+            self._prefill_step()
+        if any(s not in self._prefilling for s in self.pool.active):
             self._decode_once()
         return not self.pool.idle()
 
@@ -330,5 +667,6 @@ class ServeEngine:
             pass
         return ServeReport(sessions=dict(self.sessions),
                            wall=time.monotonic() - t0,
-                           decode_steps=self._decode_steps,
-                           prefills=self._prefills)
+                           decode_steps=self.stats.decode_steps,
+                           prefills=self.stats.prefills,
+                           stats=self.stats)

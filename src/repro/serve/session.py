@@ -70,6 +70,13 @@ class Session:
         return float("nan") if self.t_first is None else \
             self.t_first - self.t_submit
 
+    @property
+    def queue_wait(self) -> float:
+        """Submit-to-admission wall time (NaN while still queued) — the
+        scheduling share of TTFT; the remainder is prefill compute."""
+        return float("nan") if self.t_admit is None else \
+            self.t_admit - self.t_submit
+
 
 def synthetic_trace(n_requests: int, vocab: int, *, seed: int = 0,
                     prompt_lens: tuple = (4, 8, 12, 16),

@@ -88,8 +88,12 @@ def generate(cfg, params, prompt: jnp.ndarray, n_new: int,
     seed = 0
     if key is not None:
         seed = int(np.asarray(jax.random.randint(key, (), 0, 2**31 - 1)))
+    # paged=False: the compat contract is bit-level fidelity to the old
+    # static loop, so the wrapper stays on the slot-dense layout (chunked
+    # prefill re-chunks recurrences, which is allclose- but not bit-exact).
     eng = ServeEngine(cfg, params, slots=b, s_max=p + n_new,
-                      temperature=temperature, seed=seed, pack=False)
+                      temperature=temperature, seed=seed, pack=False,
+                      paged=False)
     prompt_h = np.asarray(prompt, np.int32)
     ctx_h = None if ctx is None else np.asarray(ctx)
     for i in range(b):

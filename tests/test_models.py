@@ -112,6 +112,40 @@ def test_i8_kv_cache_decode_accuracy():
     assert jax.tree.leaves(st.seg_states)[0].dtype == jnp.int8
 
 
+def test_kv_i8_scale_config_roundtrip():
+    """The i8 cache scale is a config axis (cfg.kv_i8_scale), not a module
+    constant: a non-default scale must round-trip prefill -> decode (encode
+    and decode sides read the same config), stay accurate, and actually
+    change the stored fixed-point representation."""
+    cfg, params, tokens, ctx = _setup("qwen3-4b", 2, 12, dtype=jnp.float32)
+    full_logits, _ = lm.forward(cfg, params, tokens, ctx)
+
+    def decode_tail(c):
+        lg, st = lm.prefill(c, params, tokens[:, :8], ctx, s_max=14)
+        outs = [lg]
+        for t in range(8, 12):
+            lg, st = lm.decode_step(c, params, tokens[:, t:t+1], st)
+            outs.append(lg)
+        return np.asarray(jnp.concatenate(outs, 1), np.float32), st
+
+    want = np.asarray(full_logits[:, 7:], np.float32)
+    caches = {}
+    # 16 is coarser than the default 32 (double the rounding error, hence
+    # the looser bound) but still clip-free; going *finer* than 32 would
+    # saturate int8 at these |k| magnitudes
+    for scale, bound in ((32.0, 2e-2), (16.0, 4e-2)):
+        c = dataclasses.replace(cfg, kv_cache_dtype="i8", kv_i8_scale=scale)
+        assert c.kv_i8_scale == scale
+        dec, st = decode_tail(c)
+        rel = np.abs(dec - want).max() / np.abs(want).max()
+        assert rel < bound, (scale, rel)
+        caches[scale] = np.asarray(jax.tree.leaves(st.seg_states)[0])
+    # a different scale stores different fixed-point words — the field is
+    # genuinely wired through both the prefill and decode encoders
+    assert caches[32.0].dtype == np.int8
+    assert not np.array_equal(caches[32.0], caches[16.0])
+
+
 def test_chunked_attention_matches_full():
     cfg, params, tokens, ctx = _setup("qwen2-7b", 2, 16)
     full, _ = lm.forward(cfg, params, tokens, ctx, q_chunk=0)

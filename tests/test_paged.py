@@ -1,0 +1,326 @@
+"""Block-paged KV cache + chunked prefill (DESIGN.md §14).
+
+The contract under test: the paged serve path — shared block pool,
+per-slot block tables, fixed-size chunked prefill — is *token-identical*
+to the slot-dense path for every arch family that caches attention state
+(dense / local-window / enc-dec / vlm) and for the pure-recurrent archs
+(whose per-slot state stays dense by design); MoE archs are exempt from
+cross-layout identity (expert capacity is a function of the dispatch
+group length, so C-sized chunks legitimately drop differently than a
+P-length exact prefill) and are pinned for schedule-independence instead.
+Runs in whichever REPRO_KERNEL_IMPL mode CI selects, so both kernel modes
+cover the sweep.  BlockPool is pure host logic, unit-tested without a
+model.
+"""
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm
+from repro.serve import BlockPool, ServeEngine, synthetic_trace
+
+# dense / local+recurrent / enc-dec / vlm / pure-recurrent — the identity
+# sweep the acceptance criteria pin (MoE is exercised separately)
+SWEEP_ARCHS = ["qwen3-4b", "recurrentgemma-2b", "whisper-tiny",
+               "llama-3.2-vision-11b", "xlstm-350m"]
+
+
+def _setup(name, **over):
+    cfg = configs.get(name).smoke(dtype=jnp.float32, **over)
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % 2**31)
+    return cfg, lm.init_params(cfg, key)
+
+
+def _run(cfg, params, trace, *, paged, slots=2, s_max=24, pack=True,
+         n_blocks=0, seed=0, temperature=0.0):
+    eng = ServeEngine(cfg, params, slots=slots, s_max=s_max, pack=pack,
+                      paged=paged, n_blocks=n_blocks, seed=seed,
+                      temperature=temperature)
+    for r in trace:
+        eng.submit(r)
+    report = eng.run()
+    toks = {rid: report.tokens(rid).tolist() for rid in report.sessions}
+    return toks, eng
+
+
+# ---------------------------------------------------------------------------
+# BlockPool: pure allocation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_alloc_lowest_first_deterministic():
+    pool = BlockPool(8)
+    assert pool.capacity == 7 and pool.available == 7 and pool.in_use == 0
+    a = pool.alloc(0, 3)
+    assert a == [1, 2, 3]            # block 0 reserved (trash), lowest first
+    b = pool.alloc(1, 2)
+    assert b == [4, 5]
+    pool.free(0)
+    assert pool.available == 5
+    # freed ids return sorted: the next alloc reuses the lowest again
+    assert pool.alloc(2, 3) == [1, 2, 3]
+    assert pool.in_use == 5
+
+
+def test_block_pool_oom_and_free_reclaims_all():
+    pool = BlockPool(5)
+    pool.alloc(7, 2)
+    pool.alloc(7, 1)                 # same request grows its hold
+    assert pool.held(7) == [1, 2, 3]
+    with pytest.raises(RuntimeError):
+        pool.alloc(8, 2)             # only 1 free
+    assert pool.free(7) == 3         # eviction reclaims every held block
+    assert pool.available == pool.capacity
+    assert pool.free(7) == 0         # idempotent
+    with pytest.raises(ValueError):
+        BlockPool(1)                 # trash block alone is not a pool
+    with pytest.raises(ValueError):
+        pool.alloc(9, -1)
+
+
+# ---------------------------------------------------------------------------
+# paged == dense token identity (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", SWEEP_ARCHS)
+def test_paged_matches_dense_tokens(name):
+    """Property-style sweep: same seeded mixed-length trace through the
+    slot-dense and block-paged engines -> identical tokens per request
+    (chunked prefill + table gather/scatter vs exact-length prefill +
+    contiguous cache)."""
+    cfg, params = _setup(name)
+    trace = synthetic_trace(5, cfg.vocab, seed=2, prompt_lens=(4, 6, 9),
+                            new_tokens=(3, 6), n_ctx_tokens=cfg.n_ctx_tokens,
+                            d_model=cfg.d_model)
+    dense, _ = _run(cfg, params, trace, paged=False)
+    paged, eng = _run(cfg, params, trace, paged=True)
+    assert dense == paged
+    assert eng.stats.prefills == len(trace)
+    if eng.blocks is not None:
+        assert eng.blocks.in_use == 0        # every eviction returned blocks
+        assert eng.stats.blocks_peak > 0
+
+
+def test_paged_packed_residency_matches_dense_and_float():
+    """Both resident modes run on the paged layout: packed-paged equals
+    float-paged equals packed-dense token-for-token."""
+    cfg, params = _setup("qwen2-7b+xnor")
+    trace = synthetic_trace(4, cfg.vocab, seed=6, prompt_lens=(4, 7),
+                            new_tokens=(3, 5))
+    dense_packed, _ = _run(cfg, params, trace, paged=False, pack=True)
+    paged_packed, _ = _run(cfg, params, trace, paged=True, pack=True)
+    paged_float, _ = _run(cfg, params, trace, paged=True, pack=False)
+    assert dense_packed == paged_packed == paged_float
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "whisper-tiny"])
+def test_paged_matches_dense_i8_cache(name):
+    """The fixed-point i8 cache runs on both layouts and stays identical —
+    including enc-dec, whose dense resident self-cache must be allocated
+    i8 for _kv_from_seq's scaled words to be decoded with the correction."""
+    cfg, params = _setup(name)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype="i8")
+    trace = synthetic_trace(4, cfg.vocab, seed=8, prompt_lens=(4, 7),
+                            new_tokens=(3, 5), n_ctx_tokens=cfg.n_ctx_tokens,
+                            d_model=cfg.d_model)
+    dense, deng = _run(cfg, params, trace, paged=False)
+    paged, peng = _run(cfg, params, trace, paged=True)
+    assert dense == paged
+    for eng in (deng, peng):
+        kv = jax.tree.leaves(eng._state.seg_states)[0]
+        assert kv.dtype == jnp.int8
+
+
+def test_paged_moe_deterministic_across_slot_counts():
+    """MoE is exempt from cross-layout identity (capacity is group-length
+    dependent), but the paged path must still be schedule-independent:
+    identical tokens whatever the slot count, greedy and sampled."""
+    cfg, params = _setup("llama4-scout-17b-a16e")
+    trace_args = dict(seed=3, prompt_lens=(4, 6, 9), new_tokens=(3, 5))
+
+    def run(slots, temperature):
+        trace = synthetic_trace(5, cfg.vocab, **trace_args)
+        toks, _ = _run(cfg, params, trace, paged=True, slots=slots,
+                       temperature=temperature, seed=11)
+        return toks
+
+    assert run(1, 0.0) == run(2, 0.0) == run(4, 0.0)
+    assert run(1, 0.7) == run(3, 0.7)
+
+
+def test_paged_local_window_ring_recycles_blocks():
+    """A prompt much longer than the window: the ring holds only
+    ceil((window + C - 1) / bs) blocks however long the prompt — blocks
+    that fall out of the window are recycled, never accumulated — and the
+    tokens still match the dense rolling-buffer path."""
+    cfg, params = _setup("recurrentgemma-2b", local_window=8)
+    widths = lm.paged_table_widths(cfg, 32, cfg.block_size,
+                                   cfg.prefill_chunk)
+    assert set(widths) == {"win"}            # no full-attention layers
+    assert widths["win"] == 2                # (8 + 8 - 1) tokens over 8-blocks
+    rng = np.random.default_rng(0)
+    from repro.serve import Request
+    trace = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, 20),
+                     max_new_tokens=5),
+             Request(rid=1, prompt=rng.integers(0, cfg.vocab, 23),
+                     max_new_tokens=4)]
+    dense, _ = _run(cfg, params, trace, paged=False, s_max=32)
+    paged, eng = _run(cfg, params, trace, paged=True, s_max=32)
+    assert dense == paged
+    # 2 slots x 2-block ring is the whole worst case, prompt length be damned
+    assert eng.stats.blocks_peak <= 2 * widths["win"]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: one program for any prompt-length mix
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_traces_one_program():
+    """A mixed-length trace compiles exactly one prefill program and one
+    decode program under the paged engine; the dense engine traces prefill
+    once per distinct prompt length."""
+    cfg, params = _setup("qwen3-4b")
+    trace = synthetic_trace(6, cfg.vocab, seed=4, prompt_lens=(3, 5, 9, 11),
+                            new_tokens=(2, 4))
+    lens = {r.prompt.shape[0] for r in trace}
+    assert len(lens) >= 3                    # the mix is genuinely mixed
+    _, eng = _run(cfg, params, trace, paged=True)
+    assert eng.stats.prefill_traces == 1
+    assert eng.stats.decode_traces == 1
+    assert eng.stats.prefill_chunks >= eng.stats.prefills
+    _, dense_eng = _run(cfg, params, trace, paged=False)
+    assert dense_eng.stats.prefill_traces == len(lens)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt admitted beside a decoding request is consumed one
+    chunk per engine step — the decode batch advances between chunks
+    instead of stalling head-of-line — and tokens still match the dense
+    engine (the mid-prefill slot rides the decode batch inertly: recurrent
+    state frozen, KV writes trash-routed)."""
+    from repro.serve import Request
+
+    cfg, params = _setup("recurrentgemma-2b")       # recurrent + local attn
+    rng = np.random.default_rng(5)
+    c = cfg.prefill_chunk
+    long_p, short_p = 5 * c, 3
+    trace = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, short_p),
+                     max_new_tokens=8),
+             Request(rid=1, prompt=rng.integers(0, cfg.vocab, long_p),
+                     max_new_tokens=3)]
+    s_max = long_p + 8
+    dense, _ = _run(cfg, params, trace, paged=False, s_max=s_max)
+
+    eng = ServeEngine(cfg, params, slots=2, s_max=s_max, paged=True)
+    for r in trace:
+        eng.submit(r)
+    eng.step()
+    # step 1: both admitted; each advanced exactly ONE chunk; the short
+    # prompt (1 chunk) finished prefill and decoded, the long one did not
+    assert eng.stats.prefill_chunks == 2
+    assert eng.stats.decode_steps == 1
+    assert len(eng.sessions[0].tokens) == 2          # prefill tok + 1 decode
+    assert len(eng.sessions[1].tokens) == 0          # still prefilling
+    for _ in range(3):
+        eng.step()
+    # the short request decoded every step while the long prefill ran
+    assert eng.stats.prefill_chunks == 5
+    assert len(eng.sessions[0].tokens) == 5
+    while eng.step():
+        pass
+    paged = {rid: eng.sessions[rid].tokens for rid in eng.sessions}
+    assert paged == dense
+
+
+def test_paged_oom_backpressure_serializes_and_completes():
+    """A pool sized for one request at a time: admissions serialize behind
+    block availability (FIFO head waits, nobody starves), every request
+    completes, and the tokens are unchanged."""
+    cfg, params = _setup("qwen3-4b")
+    trace = synthetic_trace(4, cfg.vocab, seed=7, prompt_lens=(4, 6),
+                            new_tokens=(4, 6))
+    need = max(-(-(r.prompt.shape[0] + r.max_new_tokens - 1)
+                 // cfg.block_size) for r in trace)
+    free_run, _ = _run(cfg, params, trace, paged=True, slots=2)
+    tight, eng = _run(cfg, params, trace, paged=True, slots=2,
+                      n_blocks=need + 1)
+    assert tight == free_run
+    assert all(s.done for s in eng.sessions.values())
+    assert eng.stats.blocks_peak <= need
+    assert eng.blocks.in_use == 0
+    # queue-wait is visible: later requests waited for blocks/slots
+    waits = [s.queue_wait for s in eng.sessions.values()]
+    assert all(w == w for w in waits)        # no NaN: everyone was admitted
+    assert max(waits) > min(waits)
+
+
+def test_paged_submit_rejects_impossible_request():
+    cfg, params = _setup("qwen3-4b")
+    from repro.serve import Request
+    eng = ServeEngine(cfg, params, slots=1, s_max=64, paged=True,
+                      n_blocks=3)
+    with pytest.raises(ValueError, match="blocks"):
+        eng.submit(Request(rid=0, prompt=np.arange(30), max_new_tokens=20))
+
+
+# ---------------------------------------------------------------------------
+# paged layout plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_state_spec_shapes():
+    cfg = configs.get("qwen3-4b").smoke()
+    st = lm.paged_decode_state_spec(cfg, 3, 24, n_blocks=10, block_size=8,
+                                    abstract=True)
+    assert st.pos.shape == (3,) and st.pos.dtype == jnp.int32
+    assert st.ctx is None
+    pool = st.seg_states[0].k                # stacked per layer
+    n_layers = cfg.segments()[0][1]
+    assert pool.shape == (n_layers, 10, cfg.n_kv_heads, 8, cfg.d_head)
+
+
+def test_paged_table_widths():
+    cfg = configs.get("qwen3-4b").smoke()            # attn only
+    assert lm.paged_table_widths(cfg, 48, 8, 8) == {"full": 6}
+    cfg = configs.get("recurrentgemma-2b").smoke()   # local only (window 32)
+    assert lm.paged_table_widths(cfg, 256, 8, 8) == {"win": 5}  # 39 tokens
+    cfg = configs.get("xlstm-350m").smoke()          # no KV cache at all
+    assert lm.paged_table_widths(cfg, 48, 8, 8) == {}
+
+
+def test_engine_stats_block_occupancy_quantities():
+    from repro.serve import EngineStats
+
+    st = EngineStats(blocks_total=10)
+    for u in (2, 6, 4):
+        st.observe_blocks(u)
+    assert st.blocks_peak == 6
+    assert st.blocks_in_use == 4
+    assert st.blocks_mean == pytest.approx(4.0)
+    assert st.block_utilization == pytest.approx(0.4)
+    assert EngineStats().block_utilization == 0.0
+
+
+def test_report_ttft_and_queue_wait_quantiles():
+    cfg, params = _setup("qwen3-4b")
+    trace = synthetic_trace(3, cfg.vocab, seed=1, prompt_lens=(4, 6),
+                            new_tokens=(3,))
+    eng = ServeEngine(cfg, params, slots=1, s_max=16, paged=True)
+    for r in trace:
+        eng.submit(r)
+    report = eng.run()
+    ttft = report.ttft_quantiles((0.5, 0.95))
+    qw = report.queue_wait_quantiles((0.5, 0.95))
+    lat = report.latency_quantiles((0.5, 0.95))
+    assert 0.0 <= qw[0.5] <= ttft[0.5] <= lat[0.5]
+    assert ttft[0.95] <= lat[0.95]
+    for s in report.sessions.values():       # queue_wait <= ttft per session
+        assert s.queue_wait <= s.ttft
