@@ -20,12 +20,20 @@ Serve paths over the same seeded mixed-length request trace:
                  archs: binary filters as uint32 sign-planes, float
                  weights absent).
 
+A second table runs a 90%-shared-prefix trace (the system-prompt regime)
+through the paged engine with the content-addressed prefix cache on vs
+off (DESIGN.md §15): hit rate, fresh blocks per request, copy-on-write
+copies, and TTFT side by side.
+
 Reported per path: useful tok/s (requested tokens / wall), p50/p95
 per-request latency, p50/p95 TTFT, resident param bytes, and block-pool
 utilization (mean/peak blocks in use) for paged rows.  ``--smoke`` shrinks
-the trace and asserts (a) every continuous path >= the static baseline and
-(b) paged-continuous >= dense-continuous at equal cache memory — wired
-into CI in both kernel modes.
+the trace and asserts (a) every continuous path >= the static baseline,
+(b) paged-continuous >= dense-continuous at equal cache memory, and
+(c) on the shared trace, prefix caching yields bit-identical tokens with
+lower TTFT p50 (gated in engine steps — schedule depth — since wall time
+on the smoke model is dispatch overhead, not prefill compute) and fewer
+fresh blocks per request — wired into CI in both kernel modes.
 
 Run:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
 """
@@ -73,11 +81,13 @@ def run_static(cfg, params, trace, slots: int):
 
 
 def run_engine(cfg, params, trace, slots: int, s_max: int, pack: bool,
-               seed: int, paged: bool = False, n_blocks: int = 0):
+               seed: int, paged: bool = False, n_blocks: int = 0,
+               prefix_cache: bool = True):
     from repro.serve import ServeEngine
 
     eng = ServeEngine(cfg, params, slots=slots, s_max=s_max, seed=seed,
-                      pack=pack, paged=paged, n_blocks=n_blocks)
+                      pack=pack, paged=paged, n_blocks=n_blocks,
+                      prefix_cache=prefix_cache)
     for r in trace:
         eng.submit(r)
     report = eng.run()
@@ -174,6 +184,98 @@ def _bench(arch: str, smoke: bool, slots: int, requests: int, seed: int,
     return cfg, rows, stat
 
 
+def _bench_prefix(arch: str, smoke: bool, slots: int, requests: int,
+                  seed: int, quiet: bool = False):
+    """Prefix caching on a shared-prompt trace (DESIGN.md §15).
+
+    90% of requests open with one long common prefix — the system-prompt
+    regime prefix caching exists for.  The same trace runs through two
+    otherwise identical paged engines, prefix cache on vs off; the cache
+    skips the shared blocks' prefill chunks and maps them copy-on-write,
+    so TTFT and fresh blocks per request both drop while tokens stay
+    bit-identical (sharing reuses the exact KV the donor wrote).
+    """
+    def say(*a):
+        if not quiet:
+            print(*a)
+    import jax
+    import repro.configs as configs
+    from repro.models import lm
+    from repro.serve import synthetic_trace
+
+    cfg = configs.get(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    bs = cfg.block_size
+    plens, ntoks = ((4, 8), (4, 6)) if smoke else ((16, 32), (16, 32))
+    prefix_len = 16 * bs
+    n_req = requests or (10 if smoke else 16)
+    s_max = prefix_len + max(plens) + max(ntoks)
+    s_max += (-s_max) % bs
+    # two slots: a short first admission wave, so the donor's blocks are
+    # registered before most sharers arrive — the steady-state regime a
+    # production prefix cache lives in
+    p_slots = 2
+    n_blocks = 1 + (p_slots + 2) * (s_max // bs)
+    trace = synthetic_trace(n_req, cfg.vocab, seed=seed,
+                            prompt_lens=plens, new_tokens=ntoks,
+                            n_ctx_tokens=cfg.n_ctx_tokens,
+                            d_model=cfg.d_model,
+                            prefix_frac=0.9, prefix_len=prefix_len)
+    say(f"# prefix caching arch={cfg.name} slots={p_slots} "
+          f"requests={n_req} (90% share a {prefix_len}-token prefix, "
+          f"suffixes {plens}, budgets {ntoks}, "
+          f"n_blocks={n_blocks - 1}x{bs}tok)")
+
+    rows = []
+    for name, on in (("paged/prefix", True), ("paged/no-prefix", False)):
+        r, rep = run_engine(cfg, params, trace, p_slots, s_max, pack=False,
+                            seed=seed, paged=True, n_blocks=n_blocks,
+                            prefix_cache=on)
+        r["report"] = rep
+        stp = rep.ttft_step_quantiles((0.5, 0.95))
+        r["ttft_steps50"], r["ttft_steps95"] = stp[0.5], stp[0.95]
+        rows.append((name, r))
+
+    say(f"{'path':<15s} {'tok/s':>9s} {'ttft50':>8s} {'stp50':>6s} "
+          f"{'stp95':>6s} {'hit rate':>9s} {'blk/req':>8s} {'cow':>4s} "
+          f"{'evict':>6s}")
+    for name, r in rows:
+        st = r["stats"]
+        say(f"{name:<15s} {r['tok_per_s']:>9.1f} {r['ttft50']*1e3:>8.0f} "
+              f"{r['ttft_steps50']:>6.0f} {r['ttft_steps95']:>6.0f} "
+              f"{st.prefix_hit_rate:>8.0%} {st.blocks_per_request:>8.2f} "
+              f"{st.cow_copies:>4d} {st.prefix_evictions:>6d}")
+    return rows
+
+
+def _check_prefix_smoke(rows) -> None:
+    """--smoke gates for the shared-trace column."""
+    on, off = rows[0][1], rows[1][1]
+    for rid in on["report"].sessions:
+        assert np.array_equal(on["report"].tokens(rid),
+                              off["report"].tokens(rid)), (
+            f"rid {rid}: prefix-cached tokens diverge from uncached")
+    st_on, st_off = on["stats"], off["stats"]
+    assert st_on.prefix_hit_rate > 0.5, (
+        f"90%-shared trace only hit {st_on.prefix_hit_rate:.0%} of "
+        f"prompt tokens in the prefix cache")
+    assert st_off.prefix_hits == 0
+    assert st_on.blocks_per_request < st_off.blocks_per_request, (
+        f"prefix caching did not reduce fresh blocks per request "
+        f"({st_on.blocks_per_request:.2f} vs {st_off.blocks_per_request:.2f})")
+    # TTFT gated in engine steps (schedule depth): the smoke model is so
+    # small that wall TTFT is per-step dispatch/sync overhead, pure machine
+    # noise; the step count is deterministic and is what wall time tracks
+    # once prefill compute dominates (skipping 16 shared blocks drops p50
+    # from ~42 to ~24 steps on this trace)
+    assert on["ttft_steps50"] < off["ttft_steps50"], (
+        f"prefix-cached TTFT p50 ({on['ttft_steps50']:.0f} engine steps) "
+        f"not below uncached ({off['ttft_steps50']:.0f}) on a 90%-shared "
+        f"trace")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b+xnor")
@@ -188,6 +290,8 @@ def main() -> int:
 
     cfg, rows, stat = _bench(args.arch, args.smoke, args.slots,
                              args.requests, args.seed)
+    prefix_rows = _bench_prefix(args.arch, args.smoke, args.slots,
+                                args.requests, args.seed)
 
     if args.smoke:
         # every continuous path must clear the bar — a max() would let one
@@ -203,8 +307,10 @@ def main() -> int:
         assert paged["tok_per_s"] >= dense["tok_per_s"], (
             f"paged ({paged['tok_per_s']:.1f} tok/s) slower than dense "
             f"({dense['tok_per_s']:.1f} tok/s) at equal cache memory")
-        print("smoke OK: continuous >= static (all paths) and "
-              "paged >= dense at equal cache memory")
+        _check_prefix_smoke(prefix_rows)
+        print("smoke OK: continuous >= static (all paths), paged >= dense "
+              "at equal cache memory, and prefix caching cuts TTFT and "
+              "blocks/request on a 90%-shared trace at identical tokens")
     return 0
 
 
@@ -220,6 +326,14 @@ def run():
         yield (name.replace("/", "_"), us,
                f"tok/s={r['tok_per_s']:.1f} resident_mb="
                f"{nbytes/2**20:.2f}{util}")
+    for name, r in _bench_prefix("qwen2-7b+xnor", True, 2, 8, 0, quiet=True):
+        st = r["stats"]
+        yield (name.replace("/", "_").replace("-", "_"),
+               r["ttft50"] * 1e6,
+               f"ttft50_steps={r['ttft_steps50']:.0f} "
+               f"hit_rate={st.prefix_hit_rate:.2f} "
+               f"blk_per_req={st.blocks_per_request:.2f} "
+               f"cow={st.cow_copies}")
 
 
 if __name__ == "__main__":

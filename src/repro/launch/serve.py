@@ -7,9 +7,15 @@ throughout.  Reports aggregate throughput and per-request latency
 quantiles; ``--static`` runs the legacy one-batch ``generate`` path
 instead, for an A/B on the same machine.
 
+``--prefix-len N`` gives a ``--prefix-frac`` fraction of the trace a
+shared N-token leading prefix (the system-prompt regime); the paged
+engine's content-addressed prefix cache (DESIGN.md §15) then skips the
+shared blocks' prefill and reports hit rate + fresh blocks per request.
+``--no-prefix-cache`` A/Bs it off.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b+xnor \
-      --smoke --slots 4 --requests 16 --new-tokens 16
+      --smoke --slots 4 --requests 16 --new-tokens 16 --prefix-len 64
 """
 
 from __future__ import annotations
@@ -54,6 +60,13 @@ def main() -> int:
                     help="chunked-prefill piece size (0: cfg.prefill_chunk)")
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="shared block-pool size (0: slots x full tables)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-addressed prefix caching (A/B)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared leading tokens in the trace (0: none)")
+    ap.add_argument("--prefix-frac", type=float, default=0.9,
+                    help="fraction of requests opening with the shared "
+                         "prefix (with --prefix-len)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -67,8 +80,9 @@ def main() -> int:
         args.requests, cfg.vocab, seed=args.seed,
         prompt_lens=tuple(sorted({max(2, pl // 4), max(3, pl // 2), pl})),
         new_tokens=tuple(sorted({max(2, nt // 2), nt})),
-        n_ctx_tokens=cfg.n_ctx_tokens, d_model=cfg.d_model)
-    s_max = args.s_max or (pl + nt)
+        n_ctx_tokens=cfg.n_ctx_tokens, d_model=cfg.d_model,
+        prefix_frac=args.prefix_frac, prefix_len=args.prefix_len)
+    s_max = args.s_max or (args.prefix_len + pl + nt)
 
     if args.static:
         # the TRUE legacy path (generate_static, not the engine wrapper):
@@ -98,7 +112,8 @@ def main() -> int:
                       seed=args.seed, pack=not args.no_pack,
                       paged=not args.dense, block_size=args.block_size,
                       prefill_chunk=args.prefill_chunk,
-                      n_blocks=args.n_blocks)
+                      n_blocks=args.n_blocks,
+                      prefix_cache=not args.no_prefix_cache)
     for r in trace:
         eng.submit(r)
     report = eng.run()
@@ -125,6 +140,16 @@ def main() -> int:
               f"(util {st.block_utilization:.0%}); "
               f"prefill traces {st.prefill_traces} "
               f"({st.prefill_chunks} chunks)")
+        # hit rate = prompt tokens whose prefill was skipped via cached
+        # blocks; blocks/request = fresh allocations per admission (shared
+        # blocks are mapped, not allocated)
+        print(f"  prefix cache: "
+              f"{'on' if eng.prefix_caching else 'off'}; "
+              f"hit rate {st.prefix_hit_rate:.0%} "
+              f"({st.prefix_hits}/{st.prefills} prompts, "
+              f"{st.prefix_tokens}/{st.prompt_tokens} tokens), "
+              f"{st.blocks_per_request:.2f} fresh blocks/request, "
+              f"{st.cow_copies} cow, {st.prefix_evictions} evictions")
     done = sum(1 for s in report.sessions.values() if s.done)
     first = trace[0]
     print(f"  completed {done}/{len(trace)}; first request tokens: "

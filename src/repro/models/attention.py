@@ -337,6 +337,22 @@ class PagedKVCache(NamedTuple):
         return cls(jax.ShapeDtypeStruct(shp, dt),
                    jax.ShapeDtypeStruct(shp, dt))
 
+    def copy_block(self, src, dst) -> "PagedKVCache":
+        """Physical block copy ``dst := src`` in both pools — the device
+        side of copy-on-write prefix sharing (DESIGN.md §15): a request
+        whose next scatter would land in a block it shares read-only first
+        duplicates that block into a private one and repoints its table row.
+        Accepts the bare ``(n_blocks, ...)`` pool or the layer-stacked
+        ``(n_layers, n_blocks, ...)`` resident form (block axis = ndim-4);
+        ``src``/``dst`` are device scalars, so one jitted copy program
+        serves every (donor, recipient) pair without retracing."""
+        axis = self.k.ndim - 4
+
+        def cp(a):
+            row = jax.lax.dynamic_index_in_dim(a, src, axis, keepdims=True)
+            return jax.lax.dynamic_update_index_in_dim(a, row, dst, axis)
+        return PagedKVCache(cp(self.k), cp(self.v))
+
 
 def paged_attention(cfg, p: dict, x: jnp.ndarray, cache: PagedKVCache,
                     table: jnp.ndarray, pos: jnp.ndarray, *, window: int = 0,

@@ -869,6 +869,26 @@ def segment_chunk(cfg, seg_params: list, x, states: list, slot, pos0,
     return x, new_states
 
 
+def segment_copy_block(cfg, states: list, src, dst):
+    """Copy physical block ``src`` -> ``dst`` in every shared pool leaf
+    (the device half of copy-on-write prefix sharing, DESIGN.md §15).
+
+    Per-slot leaves (recurrent carries, ctx_kv) pass through untouched —
+    prefix sharing is only enabled for archs whose sequential state lives
+    entirely in the paged pools, so there is nothing per-slot to duplicate.
+    Block ids are unique across table classes and requests, which makes the
+    copy safe to apply to *every* pool: at most one class maps ``src``.
+    """
+    out = []
+    for (kind, _), st in zip(cfg.segments(), states):
+        block = KINDS[kind]
+        shared, per_slot = block.paged_split(st)
+        if shared is not None:
+            shared = shared.copy_block(src, dst)
+        out.append(block.paged_merge(shared, per_slot))
+    return out
+
+
 def segment_states(cfg, segments, batch, s_max, abstract: bool):
     """Stacked decode states per segment (leading axis = layers in segment)."""
     out = []

@@ -303,22 +303,28 @@ def paged_decode_step(cfg, params, token: jnp.ndarray, state: DecodeState,
 
 def prefill_chunk_step(cfg, params, tokens: jnp.ndarray, state: DecodeState,
                        slot, n_valid, tables: dict,
-                       ctx: jnp.ndarray | None = None, fresh=None):
+                       ctx: jnp.ndarray | None = None, fresh=None, start=0):
     """One chunked-prefill piece for resident slot ``slot``.
 
     tokens (1, C) — positions ``pos0 .. pos0+C-1`` of the prompt with
-    ``pos0 = state.pos[slot]`` when continuing (``fresh`` false) and 0 when
-    the slot was just admitted; only the first ``n_valid`` tokens are real,
-    the rest are padding (every prompt runs through this one program in
-    fixed-C pieces — one trace for the whole mixed-length workload).
-    ``ctx`` is the request's modality context: *encoded* frames for enc-dec
-    archs (:func:`encode` runs once at admission), raw patch embeddings for
-    vlm.  ``tables`` rows are this slot's (1, W) block-table rows.
+    ``pos0 = state.pos[slot]`` when continuing (``fresh`` false) and
+    ``start`` when the slot was just admitted; only the first ``n_valid``
+    tokens are real, the rest are padding (every prompt runs through this
+    one program in fixed-C pieces — one trace for the whole mixed-length
+    workload).  ``start`` is 0 for a cold prompt and the skip point under
+    prefix caching (DESIGN.md §15): positions 0..start-1 are already held
+    in shared cache blocks mapped by this slot's table, so the resumed
+    chunk scatters and attends from ``start`` as if it had computed the
+    prefix itself.  ``ctx`` is the request's modality context: *encoded*
+    frames for enc-dec archs (:func:`encode` runs once at admission), raw
+    patch embeddings for vlm.  ``tables`` rows are this slot's (1, W)
+    block-table rows.
     Returns (logits of the last valid position (1, 1, V), new state).
     """
     c = tokens.shape[1]
     pos0 = jnp.where(jnp.asarray(fresh if fresh is not None else False),
-                     0, state.pos[slot]).astype(jnp.int32)
+                     jnp.asarray(start, jnp.int32),
+                     state.pos[slot]).astype(jnp.int32)
     valid = (jnp.arange(c) < n_valid)[None]                    # (1, C)
     x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
     if ctx is not None:
@@ -331,3 +337,34 @@ def prefill_chunk_step(cfg, params, tokens: jnp.ndarray, state: DecodeState,
     logits = layers.logits(cfg, params["embed"], xlast)
     pos = state.pos.at[slot].set(pos0 + n_valid)
     return logits, DecodeState(pos, tuple(new_states), state.ctx)
+
+
+def prefix_cache_eligible(cfg) -> bool:
+    """Whether prefix sharing over the paged pools is sound for this arch.
+
+    Sharing reconstructs a request's entire sequential state from cached
+    blocks, so every decoder segment's state must live in the paged pools
+    (ctx_kv does not count against this: it is recomputed from the
+    per-request ctx on every chunk).  Two documented exceptions
+    (DESIGN.md §15):
+
+    * recurrent kinds (rglru/mlstm/slstm) carry dense per-slot state that
+      is not block-granular — a skipped prefix would leave the carry cold;
+    * local sliding-window layers use block *rings* whose physical blocks
+      are recycled in place, so their contents are never stable enough to
+      register, and a resumed chunk could not rebuild the in-window keys.
+
+    MoE remains eligible: its KV is ordinary paged attention state (the
+    §14 capacity-grouping caveat exempts it from cross-path token identity,
+    not from sharing).
+    """
+    kinds = {k for k, _ in cfg.segments()}
+    return bool(kinds) and kinds <= {"attn", "moe", "dec", "cross"}
+
+
+def paged_copy_block(cfg, state: DecodeState, src, dst) -> DecodeState:
+    """Copy-on-write block duplication ``dst := src`` across every shared
+    pool (DESIGN.md §15).  ``src``/``dst`` are device scalars — the serve
+    engine jits this once per engine and calls it for any pair."""
+    seg = blocks.segment_copy_block(cfg, list(state.seg_states), src, dst)
+    return DecodeState(state.pos, tuple(seg), state.ctx)

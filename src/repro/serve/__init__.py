@@ -1,16 +1,19 @@
-"""Continuous-batching XNOR serve engine (DESIGN.md §13–§14).
+"""Continuous-batching XNOR serve engine (DESIGN.md §13–§15).
 
 Public surface:
   Request / Session / synthetic_trace — the request model,
   SlotPool / BlockPool                — pure scheduling bookkeeping (slots,
-                                        paged-KV block allocation),
+                                        refcounted paged-KV block allocation),
+  PrefixIndex                         — content-addressed prefix cache index,
   ServeEngine / ServeReport           — the engine itself,
-  EngineStats                         — counters incl. block occupancy.
+  EngineStats                         — counters incl. block occupancy and
+                                        prefix-cache hit rate.
 """
 
-from repro.serve.scheduler import (BlockPool, EngineStats, ServeEngine,
-                                   ServeReport, SlotPool)
+from repro.serve.scheduler import (BlockPool, EngineStats, PrefixIndex,
+                                   ServeEngine, ServeReport, SlotPool)
 from repro.serve.session import Request, Session, synthetic_trace
 
-__all__ = ["BlockPool", "EngineStats", "Request", "ServeEngine",
-           "ServeReport", "Session", "SlotPool", "synthetic_trace"]
+__all__ = ["BlockPool", "EngineStats", "PrefixIndex", "Request",
+           "ServeEngine", "ServeReport", "Session", "SlotPool",
+           "synthetic_trace"]

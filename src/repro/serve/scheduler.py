@@ -40,9 +40,11 @@ occupancy (peak/mean blocks in use) for the benchmarks.
 
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import functools
+import hashlib
 import time
 from typing import Any
 
@@ -121,7 +123,7 @@ class SlotPool:
 
 
 class BlockPool:
-    """Host allocator for the shared paged-KV block pool (DESIGN.md §14).
+    """Host allocator for the shared paged-KV block pool (DESIGN.md §14/§15).
 
     Physical block 0 is the reserved *trash* block — dead-slot and padding
     writes are routed there and never read — so ids 1..n_blocks-1 are
@@ -129,6 +131,18 @@ class BlockPool:
     request id reclaims everything the request held), which keeps the whole
     engine deterministic for a fixed trace.  Pure host logic, like
     :class:`SlotPool`, so it is unit-testable without a model.
+
+    Prefix sharing (§15) adds per-block refcounts: a block may be *held*
+    by several requests at once (:meth:`share` maps an existing block into
+    another request read-only; a block is writable only while exactly one
+    request holds it and it is not cached) and may be marked *cached*
+    (registered in a :class:`PrefixIndex`).  A cached block whose refcount
+    drops to zero is not freed but parked in an *idle* tier — content kept
+    resident, revived by a later :meth:`share`, reclaimed least-recently-
+    idle-first by :meth:`evict_idle` under pool pressure.  Uncached blocks
+    go straight back to the free list, exactly the pre-§15 behavior.  LRU
+    order uses a logical clock, never wall time, so eviction (and with it
+    the whole engine) stays deterministic for a fixed trace.
     """
 
     def __init__(self, n_blocks: int):
@@ -139,6 +153,10 @@ class BlockPool:
         self.n_blocks = n_blocks
         self._free = list(range(1, n_blocks))    # kept sorted ascending
         self._held: dict[int, list[int]] = {}    # rid -> block ids
+        self._ref: dict[int, int] = {}           # bid -> holders (>= 1)
+        self._cached: set[int] = set()           # registered in a PrefixIndex
+        self._idle: dict[int, int] = {}          # cached, ref 0: bid -> stamp
+        self._clock = 0                          # deterministic LRU time
 
     @property
     def capacity(self) -> int:
@@ -147,11 +165,41 @@ class BlockPool:
 
     @property
     def available(self) -> int:
+        """Immediately allocatable (free list only — idle cached blocks
+        need :meth:`evict_idle` first)."""
         return len(self._free)
 
     @property
+    def idle(self) -> int:
+        """Cached blocks with no holder (evictable, content resident)."""
+        return len(self._idle)
+
+    @property
+    def reclaimable(self) -> int:
+        """free + idle: what an admission gate may count on, since idle
+        cached blocks can always be evicted to cover an allocation."""
+        return len(self._free) + len(self._idle)
+
+    @property
     def in_use(self) -> int:
-        return self.capacity - len(self._free)
+        """Blocks held by at least one request (idle cached blocks are
+        resident but not in use)."""
+        return self.capacity - len(self._free) - len(self._idle)
+
+    @property
+    def free_blocks(self) -> list[int]:
+        return list(self._free)
+
+    @property
+    def idle_blocks(self) -> list[int]:
+        """Idle cached blocks, eviction (LRU) order."""
+        return sorted(self._idle, key=self._idle.__getitem__)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def cached(self, bid: int) -> bool:
+        return bid in self._cached
 
     def alloc(self, rid: int, n: int) -> list[int]:
         """n lowest free block ids, charged to request ``rid``."""
@@ -160,21 +208,209 @@ class BlockPool:
         if n > len(self._free):
             raise RuntimeError(
                 f"block pool exhausted: request {rid} needs {n} blocks, "
-                f"{len(self._free)} free (admission must gate on available)")
+                f"{len(self._free)} free (admission must gate on available, "
+                f"evicting idle cached blocks first)")
         ids = self._free[:n]
         del self._free[:n]
         self._held.setdefault(rid, []).extend(ids)
+        for bid in ids:
+            self._ref[bid] = 1
         return ids
 
+    def share(self, rid: int, ids: list[int]) -> None:
+        """Map existing blocks into ``rid`` read-only (refcount + 1 each).
+
+        Sharing an idle cached block revives it: it leaves the eviction
+        tier with its contents intact.  Sharing a free block (or the trash
+        block, or a block ``rid`` already holds) is a caller bug."""
+        held = self._held.setdefault(rid, [])
+        for bid in ids:
+            if bid <= 0 or bid >= self.n_blocks:
+                raise ValueError(f"share({bid}): not an allocatable block id")
+            if bid in held:
+                raise RuntimeError(
+                    f"share({bid}): request {rid} already holds it")
+            if bid in self._idle:
+                del self._idle[bid]
+                self._ref[bid] = 1
+            elif self._ref.get(bid, 0) > 0:
+                self._ref[bid] += 1
+            else:
+                raise RuntimeError(f"share({bid}): block is free")
+            held.append(bid)
+
+    def _release(self, bid: int) -> None:
+        r = self._ref[bid] - 1
+        if r > 0:
+            self._ref[bid] = r
+            return
+        del self._ref[bid]
+        if bid in self._cached:
+            self._clock += 1
+            self._idle[bid] = self._clock
+        else:
+            bisect.insort(self._free, bid)
+
     def free(self, rid: int) -> int:
-        """Return every block held by ``rid``; returns how many."""
+        """Drop every hold ``rid`` has; returns how many.  Blocks whose
+        refcount hits zero return to the free list, except cached ones,
+        which park in the idle tier."""
         ids = self._held.pop(rid, [])
-        self._free.extend(ids)
-        self._free.sort()
+        for bid in ids:
+            self._release(bid)
         return len(ids)
+
+    def drop(self, rid: int, bid: int) -> None:
+        """Release ``rid``'s hold on one block — the copy-on-write path:
+        after duplicating a shared divergence block into a private one the
+        request lets go of the original."""
+        held = self._held.get(rid)
+        if held is None or bid not in held:
+            raise KeyError(f"drop({bid}): not held by request {rid}")
+        held.remove(bid)
+        if not held:
+            del self._held[rid]
+        self._release(bid)
+
+    def set_cached(self, bid: int) -> None:
+        """Mark a held block as index-registered: its last release parks
+        it in the idle tier instead of freeing it."""
+        if self._ref.get(bid, 0) < 1:
+            raise RuntimeError(f"set_cached({bid}): block is not held")
+        self._cached.add(bid)
+
+    def evict_idle(self, n: int) -> list[int]:
+        """Reclaim the ``n`` least-recently-idled cached blocks back to
+        the free list; the caller must drop their index entries.  Held
+        (refcount > 0) blocks are never evicted."""
+        if n > len(self._idle):
+            raise RuntimeError(
+                f"evict_idle({n}): only {len(self._idle)} blocks idle")
+        victims = sorted(self._idle, key=self._idle.__getitem__)[:n]
+        for bid in victims:
+            del self._idle[bid]
+            self._cached.discard(bid)
+            bisect.insort(self._free, bid)
+        return victims
 
     def held(self, rid: int) -> list[int]:
         return list(self._held.get(rid, []))
+
+
+class PrefixIndex:
+    """Content-addressed index over cached prefix blocks (DESIGN.md §15):
+    hash-of-block-contents -> physical block id, for *full* blocks only
+    (partial blocks are still being written, so their contents are not
+    stable).  Keys are chain hashes — a block's key folds its parent's
+    key, so key equality implies the whole prefix up to and including the
+    block matched (the same prefix-digest idea as ``CimEngine``'s streamed
+    digest path, but blake2b rather than the engine's linear XOR fold: an
+    index key must survive adversarial collisions, a parity check need
+    not).  Correctness never rests on the hash either way: every entry
+    stores its actual tokens and lookup verifies them word-exactly, so a
+    collision degrades to a cache miss, never to wrong reuse — the same
+    hash-then-word-compare discipline DigestCache uses (§12).
+
+    For ctx archs (vlm / enc-dec) the chain root folds a digest of the
+    request's modality context, so equal token prefixes under different
+    images / audio never share.  Pure host logic; the engine drives
+    registration and eviction, and :class:`BlockPool` owns residency."""
+
+    ROOT = b"\x00" * 16
+
+    def __init__(self, block_size: int):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.block_size = block_size
+        # key -> (bid, tokens); parent key -> child keys; bid -> (key, parent)
+        self._entries: dict[bytes, tuple[int, np.ndarray]] = {}
+        self._children: dict[bytes, list[bytes]] = {}
+        self._by_block: dict[int, tuple[bytes, bytes]] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    @staticmethod
+    def root_key(ctx=None) -> bytes:
+        if ctx is None:
+            return PrefixIndex.ROOT
+        a = np.ascontiguousarray(np.asarray(ctx))
+        return hashlib.blake2b(repr((a.shape, a.dtype.str)).encode()
+                               + a.tobytes(), digest_size=16).digest()
+
+    def chain(self, tokens, ctx=None) -> list[tuple[bytes, bytes, np.ndarray]]:
+        """(key, parent_key, block_tokens) per full block of ``tokens``."""
+        bs = self.block_size
+        toks = np.asarray(tokens, np.int32)
+        out, parent = [], self.root_key(ctx)
+        for i in range(len(toks) // bs):
+            blk = toks[i * bs:(i + 1) * bs]
+            key = hashlib.blake2b(parent + blk.tobytes(),
+                                  digest_size=16).digest()
+            out.append((key, parent, blk))
+            parent = key
+        return out
+
+    def register(self, key: bytes, parent: bytes, bid: int,
+                 tokens: np.ndarray) -> bool:
+        """Idempotent, keep-first: when two requests with identical
+        prompts prefill concurrently both try to register, and the first
+        stays canonical (the second's block simply frees unregistered).
+        Returns True when ``bid`` newly entered the index."""
+        if key in self._entries or bid in self._by_block:
+            return False
+        self._entries[key] = (bid, np.array(tokens, np.int32))
+        self._children.setdefault(parent, []).append(key)
+        self._by_block[bid] = (key, parent)
+        return True
+
+    def drop_block(self, bid: int) -> None:
+        """Remove the entry backed by ``bid`` (pool eviction).  Entries
+        that extended it stay registered: lookup can only reach a child
+        through its matched parent — which now misses — so orphaned
+        descendants are unreachable until a re-registration of the same
+        prefix content restores the chain, and meanwhile they age out of
+        the idle LRU like any other cold block."""
+        key, parent = self._by_block.pop(bid)
+        del self._entries[key]
+        sibs = self._children[parent]
+        sibs.remove(key)
+        if not sibs:
+            del self._children[parent]
+
+    def lookup(self, prompt, ctx=None):
+        """Longest registered chain of full blocks, plus the best partial
+        continuation.
+
+        Returns ``(block_ids, n_full, child)``: the matched full blocks'
+        ids, how many, and ``(bid, d)`` for the registered block extending
+        the chain with the longest common token prefix (``d`` tokens,
+        possibly 0; ties break toward the earliest-registered child) — or
+        None when no block extends the chain.  Tokens are compared exactly
+        at every step; a hash collision is a miss, never a wrong block."""
+        bs = self.block_size
+        toks = np.asarray(prompt, np.int32)
+        ids: list[int] = []
+        parent = self.root_key(ctx)
+        for key, _, blk in self.chain(toks, ctx):
+            ent = self._entries.get(key)
+            if ent is None or not np.array_equal(ent[1], blk):
+                break
+            ids.append(ent[0])
+            parent = key
+        n_full = len(ids)
+        child = None
+        rest = toks[n_full * bs:]
+        if len(rest):
+            best = -1
+            for ck in self._children.get(parent, []):
+                bid, ctoks = self._entries[ck]
+                m = min(len(rest), len(ctoks))
+                neq = ctoks[:m] != rest[:m]
+                d = int(np.argmax(neq)) if neq.any() else m
+                if d > best:
+                    best, child = d, (bid, d)
+        return ids, n_full, child
 
 
 @dataclasses.dataclass
@@ -197,6 +433,15 @@ class EngineStats:
     blocks_total: int = 0       # allocatable blocks (0: dense layout)
     blocks_in_use: int = 0
     blocks_peak: int = 0
+    # prefix caching (DESIGN.md §15; all zero when disabled / dense)
+    cow_copies: int = 0             # divergence-block copy-on-write copies
+    prefix_hits: int = 0            # admissions that mapped >= 1 shared block
+    prefix_shared_blocks: int = 0   # total blocks mapped read-only
+    prefix_tokens: int = 0          # prompt tokens skipped via the cache
+    prompt_tokens: int = 0          # prompt tokens admitted (paged path)
+    fresh_blocks: int = 0           # blocks newly allocated at admission
+    prefix_evictions: int = 0       # cached blocks reclaimed under pressure
+    prefix_cached_blocks: int = 0   # current index size (registered blocks)
     _block_sum: int = 0
     _block_samples: int = 0
 
@@ -218,6 +463,22 @@ class EngineStats:
         if not self.blocks_total:
             return 0.0
         return self.blocks_mean / self.blocks_total
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the prefix
+        cache (skipped at prefill)."""
+        if not self.prompt_tokens:
+            return 0.0
+        return self.prefix_tokens / self.prompt_tokens
+
+    @property
+    def blocks_per_request(self) -> float:
+        """Mean *fresh* blocks allocated per admitted request — sharing
+        drives this down; the serve-throughput smoke gate pins the drop."""
+        if not self.prefills:
+            return 0.0
+        return self.fresh_blocks / self.prefills
 
 
 # ---------------------------------------------------------------------------
@@ -284,13 +545,17 @@ class _PrefillProgress:
     """Host bookkeeping for one slot's in-flight chunked prefill."""
 
     session: Session
-    padded: np.ndarray          # prompt zero-padded to n_chunks * C
-    p_len: int
+    padded: np.ndarray          # prompt suffix zero-padded to n_chunks * C
+    p_len: int                  # suffix length = prompt length - skip
     n_chunks: int
     next_chunk: int
     ctx: Any                    # encoded (enc-dec) / raw (vlm) ctx, or None
     seeds: Any                  # (1,) device seeds for the prefill sample
     rows: dict                  # this slot's (1, W) block-table rows
+    skip: int = 0               # positions served from shared prefix blocks
+    chain: list = dataclasses.field(default_factory=list)
+                                # full prompt's (key, parent, tokens) chain
+    registered: int = 0         # prompt blocks registered so far
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +597,15 @@ class ServeReport:
         """Submit-to-first-token, including time spent queued."""
         return self._quantiles((s.ttft for s in self.sessions.values()), qs)
 
+    def ttft_step_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
+        """First-token engine-step index — TTFT in schedule depth.  On a
+        dispatch-bound smoke model wall TTFT is dominated by per-step sync
+        overhead; the step count is the deterministic quantity wall time
+        tracks once prefill compute actually dominates."""
+        return self._quantiles(
+            (float("nan") if s.step_first is None else float(s.step_first)
+             for s in self.sessions.values()), qs)
+
     def queue_wait_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
         """Submit-to-admission: the scheduling share of TTFT, separated so
         prefill cost and queueing backpressure are distinguishable."""
@@ -356,13 +630,18 @@ class ServeEngine:
         schedule-independent per-(request, step) keys.
       seed: engine sampling seed.
       pack: keep binarizable linears packed-resident (xnor archs only).
+      prefix_cache: content-addressed prefix sharing over the paged pool
+        (DESIGN.md §15; paged engines only).  Auto-disabled for archs whose
+        state cannot be rebuilt from cached blocks (recurrent carries,
+        local window rings) — ``engine.prefix_caching`` reports the
+        effective setting.
     """
 
     def __init__(self, cfg, params, *, slots: int, s_max: int,
                  eos_id: int | None = None, temperature: float = 0.0,
                  seed: int = 0, pack: bool = True, paged: bool = True,
                  block_size: int = 0, prefill_chunk: int = 0,
-                 n_blocks: int = 0):
+                 n_blocks: int = 0, prefix_cache: bool = True):
         self.cfg = cfg
         self.slots = slots
         self.s_max = s_max
@@ -374,6 +653,7 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(seed)
         self.paged = bool(paged)
         self.stats = EngineStats()
+        self._step_idx = 0                 # engine steps since construction
         if self.paged:
             self.block_size = block_size or cfg.block_size
             self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
@@ -388,6 +668,13 @@ class ServeEngine:
             self.n_blocks = n_blocks
             self.blocks = BlockPool(n_blocks) if self._widths else None
             self.stats.blocks_total = n_blocks - 1 if self.blocks else 0
+            # prefix caching (DESIGN.md §15): only for archs whose whole
+            # sequential state is reconstructible from the paged pools —
+            # prefix_cache_eligible excludes recurrent carries and local
+            # window *rings* (recycled in place, contents never stable)
+            self._prefix = (PrefixIndex(self.block_size)
+                            if prefix_cache and self.blocks is not None
+                            and lm.prefix_cache_eligible(cfg) else None)
             # host-owned block tables, mirrored to device on change
             self._tables = {c: np.zeros((slots, w), np.int32)
                             for c, w in self._widths.items()}
@@ -403,6 +690,7 @@ class ServeEngine:
                                                abstract=False,
                                                per_slot_pos=True)
             self._dense_prefill_lens: set[int] = set()
+            self._prefix = None
         # host-side mirrors of the device batch (tiny, moved every step)
         self._tokens = np.zeros((slots, 1), np.int32)
         self._active = np.zeros((slots,), bool)
@@ -417,11 +705,11 @@ class ServeEngine:
         cfg, temperature = self.cfg, self.temperature
 
         def chunk_fn(params, tokens, state, slot, n_valid, tables, ctx,
-                     fresh, key, seeds):
+                     fresh, start, key, seeds):
             self.stats.prefill_traces += 1
             logits, state = lm.prefill_chunk_step(cfg, params, tokens, state,
                                                   slot, n_valid, tables, ctx,
-                                                  fresh=fresh)
+                                                  fresh=fresh, start=start)
             return (_sample_tokens(cfg, logits, key, seeds, temperature),
                     state)
 
@@ -434,6 +722,11 @@ class ServeEngine:
 
         self._chunk_program = jax.jit(chunk_fn, donate_argnums=(2,))
         self._paged_decode_program = jax.jit(decode_fn, donate_argnums=(2,))
+        # copy-on-write block duplication: src/dst are device scalars, so
+        # one program covers every (donor, recipient) pair without retracing
+        self._cow_program = jax.jit(
+            lambda state, src, dst: lm.paged_copy_block(cfg, state, src, dst),
+            donate_argnums=(0,))
         self._encode_program = None
         if cfg.is_encdec():
             self._encode_program = jax.jit(
@@ -490,12 +783,36 @@ class ServeEngine:
             if self.paged:
                 # eviction returns every block the request held; the zeroed
                 # table row routes the dead slot's frozen re-writes to the
-                # trash block so reallocated blocks are never corrupted
+                # trash block so reallocated blocks are never corrupted.
+                # Cached blocks (registered below / during prefill) park in
+                # the pool's idle tier instead of freeing.
                 if self.blocks is not None:
+                    if self._prefix is not None:
+                        self._register_finished(session, slot)
                     self.blocks.free(session.request.rid)
                 for t in self._tables.values():
                     t[slot, :] = 0
                 self._dev_tables = None
+
+    def _register_finished(self, session: Session, slot: int) -> None:
+        """Register the request's full written blocks on release — prompt
+        *and* generated region: positions 0..P+G-2 are written (the last
+        sampled token never is), so every full block's contents are final
+        and a later prompt extending this one past its prompt shares the
+        decode region too."""
+        req = session.request
+        written = req.prompt.shape[0] + len(session.tokens) - 1
+        seq = req.prompt
+        if len(session.tokens) > 1:
+            seq = np.concatenate(
+                [seq, np.asarray(session.tokens[:-1], np.int32)])
+        row = self._tables["full"][slot]
+        chain = self._prefix.chain(seq[:written], req.ctx)
+        for i, (key, parent, toks) in enumerate(chain):
+            bid = int(row[i])
+            if self._prefix.register(key, parent, bid, toks):
+                self.blocks.set_cached(bid)
+        self.stats.prefix_cached_blocks = len(self._prefix)
 
     def _ctx_for(self, req: Request):
         if req.ctx is not None:
@@ -516,6 +833,7 @@ class ServeEngine:
         t = int(np.asarray(tok)[0, 0])
         session.tokens.append(t)
         session.t_first = time.monotonic()
+        session.step_first = self._step_idx
         if self.eos_id is not None and t == self.eos_id:
             self._finish(session, "eos")
             return False
@@ -526,52 +844,166 @@ class ServeEngine:
         self._active[slot] = True
         return True
 
-    def _admissible_paged(self) -> bool:
+    @property
+    def prefix_caching(self) -> bool:
+        """Whether prefix sharing is effectively on for this engine."""
+        return self._prefix is not None
+
+    def _prefix_plan(self, req: Request) -> tuple[list[int], int, int | None]:
+        """``(shared, skip, cow_src)`` for one request: which cached blocks
+        it can map read-only, how many prompt positions that skips, and the
+        shared block its first write would land in (the copy-on-write
+        source), if any.  Pure lookup — residency changes at admission.
+
+        The divergence block (the registered block extending the matched
+        chain, matching ``d >= 0`` further tokens) is mapped whenever at
+        least one full block matched or ``d > 0`` — the uniform rule that
+        makes "exactly one COW per divergence" hold at block boundaries
+        too; a request that matches nothing takes the wholly-fresh path.
+        ``skip`` is capped at P-1: the prefill always recomputes at least
+        the last prompt position, because it must emit that logit row —
+        which also means a full-prompt hit COWs the block holding position
+        P-1 rather than writing a donor's block."""
+        p_len = req.prompt.shape[0]
+        if self._prefix is None:
+            return [], 0, None
+        ids, n_full, child = self._prefix.lookup(req.prompt, req.ctx)
+        shared = list(ids)
+        skip = n_full * self.block_size
+        if child is not None and (n_full > 0 or child[1] > 0):
+            shared.append(child[0])
+            skip += child[1]
+        skip = min(skip, p_len - 1)
+        if skip <= 0:
+            return [], 0, None
+        w0 = skip // self.block_size
+        cow = shared[w0] if w0 < len(shared) else None
+        return shared, skip, cow
+
+    def _fresh_needed(self, req: Request,
+                      plan: tuple[list[int], int, int | None]) -> dict:
+        """Fresh-block need per table class given a prefix plan: shared
+        blocks cost nothing, the COW target costs one extra."""
+        shared, _, cow = plan
+        per = self._blocks_per_class(req.prompt.shape[0], req.max_new_tokens)
+        if shared:
+            per = dict(per)
+            per["full"] -= len(shared) - (1 if cow is not None else 0)
+        return per
+
+    def _alloc_blocks(self, rid: int, n: int) -> list[int]:
+        """Alloc with eviction: when the free list runs short, reclaim the
+        LRU idle cached blocks and drop their index entries (the admission
+        gate already checked free + idle covers the need)."""
+        short = n - self.blocks.available
+        if short > 0:
+            for bid in self.blocks.evict_idle(short):
+                self._prefix.drop_block(bid)
+                self.stats.prefix_evictions += 1
+            self.stats.prefix_cached_blocks = len(self._prefix)
+        return self.blocks.alloc(rid, n)
+
+    def _admissible_paged(self) -> tuple | None:
+        """The FIFO head's prefix plan when it can be admitted, else None.
+        OOM backpressure gates on *fresh* blocks needed (shared blocks are
+        free) against free + evictable-idle — the head waits, no skipping
+        (determinism and no starvation)."""
         head = self.pool.peek()
         if head is None or not self.pool.free_slots:
-            return False
+            return None
+        plan = self._prefix_plan(head.request)
         if self.blocks is None:
-            return True
-        # OOM backpressure: the FIFO head waits (no skipping — determinism
-        # and no starvation) until eviction returns enough blocks
-        return self.blocks.available >= self._blocks_needed(
-            head.request.prompt.shape[0], head.request.max_new_tokens)
+            return plan
+        need = sum(self._fresh_needed(head.request, plan).values())
+        return plan if need <= self.blocks.reclaimable else None
 
     def _slot_table_rows(self, slot: int) -> dict:
         return {c: jnp.asarray(t[slot:slot + 1])
                 for c, t in self._tables.items()}
 
     def _admit_paged(self) -> None:
-        """Admission under the block-paged layout: reserve the request's
-        worst-case blocks and queue its chunked prefill.  The chunks
+        """Admission under the block-paged layout: map the request's shared
+        prefix blocks read-only, reserve fresh blocks for the remainder
+        (evicting idle cached blocks LRU-first under pressure), COW the
+        divergence block if the first write would land in shared cache, and
+        queue the chunked prefill of the unshared suffix.  The chunks
         themselves are dispatched by :meth:`_prefill_step` — ONE per engine
         step per admitting slot — so a long prompt interleaves with the
         decode batch in bounded ``prefill_chunk``-sized slices instead of
         blocking it head-of-line."""
-        while self._admissible_paged():
+        while (plan := self._admissible_paged()) is not None:
             session, slot = self.pool.admit()
             req = session.request
             session.t_admit = time.monotonic()
             p_len = req.prompt.shape[0]
+            shared, skip, cow_src = plan
             if self.blocks is not None:
-                for cls_name, need in self._blocks_per_class(
-                        p_len, req.max_new_tokens).items():
-                    ids = self.blocks.alloc(req.rid, need)
+                if shared:
+                    self.blocks.share(req.rid, shared)
+                fresh = {cls_name: self._alloc_blocks(req.rid, n)
+                         for cls_name, n in
+                         self._fresh_needed(req, plan).items()}
+                for cls_name, ids in fresh.items():
                     row = self._tables[cls_name][slot]
                     row[:] = 0
-                    row[:len(ids)] = ids
+                    if cls_name == "full" and shared:
+                        row[:len(shared)] = shared
+                        tail = ids
+                        if cow_src is not None:
+                            # repoint the first-write block at a private
+                            # copy; the device copy below runs before any
+                            # subsequently dispatched program can write it
+                            row[skip // self.block_size] = ids[0]
+                            tail = ids[1:]
+                        row[len(shared):len(shared) + len(tail)] = tail
+                    else:
+                        row[:len(ids)] = ids
                 self._dev_tables = None
+                if cow_src is not None:
+                    self._state = self._cow_program(
+                        self._state, jnp.int32(cow_src),
+                        jnp.int32(fresh["full"][0]))
+                    self.blocks.drop(req.rid, cow_src)
+                    self.stats.cow_copies += 1
+                self.stats.fresh_blocks += sum(len(v) for v in fresh.values())
                 self.stats.observe_blocks(self.blocks.in_use)
+            self.stats.prompt_tokens += p_len
+            if shared:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_shared_blocks += len(shared)
+                self.stats.prefix_tokens += skip
             c = self.prefill_chunk
-            n_chunks = -(-p_len // c)
+            n_suffix = p_len - skip
+            n_chunks = -(-n_suffix // c)
             padded = np.zeros((n_chunks * c,), np.int32)
-            padded[:p_len] = req.prompt
+            padded[:n_suffix] = req.prompt[skip:]
+            chain = ([] if self._prefix is None
+                     else self._prefix.chain(req.prompt, req.ctx))
             self._prefilling[slot] = _PrefillProgress(
-                session=session, padded=padded, p_len=p_len,
+                session=session, padded=padded, p_len=n_suffix,
                 n_chunks=n_chunks, next_chunk=0, ctx=self._ctx_for(req),
                 seeds=jnp.asarray([self._seed_for(req.rid, 0)], jnp.int32),
-                rows=self._slot_table_rows(slot))
+                rows=self._slot_table_rows(slot), skip=skip, chain=chain)
             self.stats.prefills += 1
+
+    def _register_upto(self, prog: _PrefillProgress, slot: int,
+                       n_done: int) -> None:
+        """Register the prompt's first ``n_done`` full blocks (those wholly
+        covered by dispatched chunks) in the prefix index.  Device programs
+        execute in dispatch order, so by the time any later-admitted
+        sharer's gather runs, the content the key promises is in place —
+        this is what lets a request share with a *still-prefilling* donor
+        (the mid-prefill divergence case).  Already-registered keys (the
+        blocks this request itself shares) no-op via keep-first."""
+        row = self._tables["full"][slot]
+        n = min(n_done, len(prog.chain))
+        while prog.registered < n:
+            key, parent, toks = prog.chain[prog.registered]
+            bid = int(row[prog.registered])
+            if self._prefix.register(key, parent, bid, toks):
+                self.blocks.set_cached(bid)
+            prog.registered += 1
+        self.stats.prefix_cached_blocks = len(self._prefix)
 
     def _prefill_step(self) -> None:
         """Advance every in-flight chunked prefill by exactly one chunk;
@@ -585,9 +1017,13 @@ class ServeEngine:
             tok, self._state = self._chunk_program(
                 self.params, piece, self._state, jnp.int32(slot),
                 jnp.int32(n_valid), prog.rows, prog.ctx,
-                jnp.asarray(j == 0), self._key, prog.seeds)
+                jnp.asarray(j == 0), jnp.int32(prog.skip), self._key,
+                prog.seeds)
             self.stats.prefill_chunks += 1
             prog.next_chunk += 1
+            if self._prefix is not None:
+                done = prog.skip + min((j + 1) * c, prog.p_len)
+                self._register_upto(prog, slot, done // self.block_size)
             if prog.next_chunk == prog.n_chunks:
                 del self._prefilling[slot]
                 self._post_prefill(prog.session, slot, tok)
@@ -653,6 +1089,7 @@ class ServeEngine:
     def step(self) -> bool:
         """Admit, advance in-flight prefills by one chunk each, then decode
         once; returns False when fully drained."""
+        self._step_idx += 1
         self._admit()
         if self._prefilling:
             self._prefill_step()

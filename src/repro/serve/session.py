@@ -53,6 +53,9 @@ class Session:
     t_admit: float | None = None
     t_first: float | None = None       # first token emitted (end of prefill)
     t_done: float | None = None
+    step_first: int | None = None      # engine step of the first token — the
+                                       # schedule-depth TTFT, deterministic
+                                       # where wall TTFT is machine noise
 
     @property
     def done(self) -> bool:
@@ -81,15 +84,35 @@ class Session:
 def synthetic_trace(n_requests: int, vocab: int, *, seed: int = 0,
                     prompt_lens: tuple = (4, 8, 12, 16),
                     new_tokens: tuple = (4, 8, 12),
-                    n_ctx_tokens: int = 0, d_model: int = 0) -> list[Request]:
+                    n_ctx_tokens: int = 0, d_model: int = 0,
+                    prefix_frac: float = 0.0,
+                    prefix_len: int = 0) -> list[Request]:
     """Seeded mixed-length request trace.
 
     Prompt and budget draws are independent per request, so slots free at
     staggered times and the admission path (prefill interleaved with decode)
     is genuinely exercised.  ``n_ctx_tokens > 0`` attaches a per-request
     modality context (vlm / enc-dec archs).
+
+    ``prefix_len > 0`` models the production regime where most prompts
+    open with one shared system prompt: a ``prefix_frac`` fraction of
+    requests get ``prefix_len`` common leading tokens (and, for ctx archs,
+    one shared ctx object — prefix sharing is keyed per-ctx).  The shared
+    material and the membership coin come from a *separate* seeded stream,
+    so the per-request draws — and with them every existing trace — are
+    bit-identical to the ``prefix_len=0`` trace modulo the prepended
+    prefix, and the trace depends only on (seed, knobs), never on any
+    engine schedule.
     """
     rng = np.random.default_rng(seed)
+    shared_prefix = shared_ctx = prng = None
+    if prefix_len:
+        prng = np.random.default_rng([seed, 0xC1A])
+        shared_prefix = prng.integers(0, vocab, size=prefix_len) \
+            .astype(np.int32)
+        if n_ctx_tokens:
+            shared_ctx = (prng.standard_normal((n_ctx_tokens, d_model))
+                          .astype(np.float32) * 0.1)
     out = []
     for rid in range(n_requests):
         p = int(rng.choice(prompt_lens))
@@ -99,5 +122,9 @@ def synthetic_trace(n_requests: int, vocab: int, *, seed: int = 0,
         if n_ctx_tokens:
             ctx = (rng.standard_normal((n_ctx_tokens, d_model))
                    .astype(np.float32) * 0.1)
+        if prefix_len and prng.random() < prefix_frac:
+            prompt = np.concatenate([shared_prefix, prompt])
+            if n_ctx_tokens:
+                ctx = shared_ctx
         out.append(Request(rid=rid, prompt=prompt, max_new_tokens=n, ctx=ctx))
     return out

@@ -1,4 +1,5 @@
-"""Block-paged KV cache + chunked prefill (DESIGN.md §14).
+"""Block-paged KV cache + chunked prefill + prefix caching (DESIGN.md
+§14–§15).
 
 The contract under test: the paged serve path — shared block pool,
 per-slot block tables, fixed-size chunked prefill — is *token-identical*
@@ -8,9 +9,14 @@ to the slot-dense path for every arch family that caches attention state
 cross-layout identity (expert capacity is a function of the dispatch
 group length, so C-sized chunks legitimately drop differently than a
 P-length exact prefill) and are pinned for schedule-independence instead.
-Runs in whichever REPRO_KERNEL_IMPL mode CI selects, so both kernel modes
-cover the sweep.  BlockPool is pure host logic, unit-tested without a
-model.
+§15 extends the contract: serving a shared-prefix trace with the prefix
+cache on is token-identical to serving it with the cache off, across the
+same arch sweep, float/packed residency and the i8 KV cache, with every
+divergence point (block boundary, mid-block, full-prompt hit, mid-prefill
+donor) costing exactly one copy-on-write copy.  Runs in whichever
+REPRO_KERNEL_IMPL mode CI selects, so both kernel modes cover the sweep.
+BlockPool and PrefixIndex are pure host logic, unit-tested without a
+model (random-interleaving properties live in test_serve_properties.py).
 """
 
 import dataclasses
@@ -23,7 +29,8 @@ import pytest
 
 import repro.configs as configs
 from repro.models import lm
-from repro.serve import BlockPool, ServeEngine, synthetic_trace
+from repro.serve import (BlockPool, PrefixIndex, Request, ServeEngine,
+                         synthetic_trace)
 
 # dense / local+recurrent / enc-dec / vlm / pure-recurrent — the identity
 # sweep the acceptance criteria pin (MoE is exercised separately)
@@ -38,10 +45,10 @@ def _setup(name, **over):
 
 
 def _run(cfg, params, trace, *, paged, slots=2, s_max=24, pack=True,
-         n_blocks=0, seed=0, temperature=0.0):
+         n_blocks=0, seed=0, temperature=0.0, prefix_cache=True):
     eng = ServeEngine(cfg, params, slots=slots, s_max=s_max, pack=pack,
                       paged=paged, n_blocks=n_blocks, seed=seed,
-                      temperature=temperature)
+                      temperature=temperature, prefix_cache=prefix_cache)
     for r in trace:
         eng.submit(r)
     report = eng.run()
@@ -324,3 +331,414 @@ def test_report_ttft_and_queue_wait_quantiles():
     assert ttft[0.95] <= lat[0.95]
     for s in report.sessions.values():       # queue_wait <= ttft per session
         assert s.queue_wait <= s.ttft
+
+
+# ---------------------------------------------------------------------------
+# BlockPool refcounts + idle tier (DESIGN.md §15 host bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_share_refcount_lifecycle():
+    pool = BlockPool(8)
+    a = pool.alloc(0, 3)                     # [1, 2, 3], ref 1 each
+    pool.share(1, a)                         # rid 1 maps them read-only
+    assert [pool.refcount(b) for b in a] == [2, 2, 2]
+    assert pool.free(0) == 3                 # donor leaves; blocks stay held
+    assert [pool.refcount(b) for b in a] == [1, 1, 1]
+    assert pool.available == 4 and pool.in_use == 3
+    assert pool.free(1) == 3                 # uncached -> straight to free
+    assert pool.available == 7 and pool.idle == 0
+    with pytest.raises(RuntimeError, match="free"):
+        pool.share(2, [1])                   # sharing a free block is a bug
+    with pytest.raises(ValueError):
+        pool.share(2, [0])                   # the trash block, ever
+    pool.alloc(3, 1)
+    pool.share(4, [1])
+    with pytest.raises(RuntimeError, match="already holds"):
+        pool.share(4, [1])
+
+
+def test_block_pool_cached_blocks_idle_then_evict_lru():
+    pool = BlockPool(8)
+    a = pool.alloc(0, 3)                     # [1, 2, 3]
+    for b in a:
+        pool.set_cached(b)
+    pool.free(0)
+    # cached blocks park idle (resident, not in use) instead of freeing
+    assert pool.available == 4 and pool.idle == 3 and pool.in_use == 0
+    assert pool.reclaimable == 7
+    assert pool.idle_blocks == [1, 2, 3]     # LRU = release order
+    pool.share(1, [2])                       # revive from idle
+    assert pool.idle_blocks == [1, 3] and pool.refcount(2) == 1
+    assert pool.cached(2)
+    pool.free(1)
+    assert pool.idle_blocks == [1, 3, 2]     # re-idled last -> evicted last
+    assert pool.evict_idle(2) == [1, 3]
+    assert not pool.cached(1) and pool.available == 6
+    with pytest.raises(RuntimeError, match="idle"):
+        pool.evict_idle(2)                   # only block 2 is left idle
+    assert pool.alloc(5, 6) == [1, 3, 4, 5, 6, 7]   # evicted ids reusable
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(6, 1)                     # idle blocks need evict first
+
+
+def test_block_pool_drop_single_hold_cow_path():
+    pool = BlockPool(6)
+    a = pool.alloc(0, 2)
+    pool.set_cached(a[0])
+    pool.share(1, a)
+    pool.drop(1, a[0])                       # rid 1 lets go of one block
+    assert pool.refcount(a[0]) == 1 and pool.held(1) == [a[1]]
+    with pytest.raises(KeyError):
+        pool.drop(1, a[0])                   # no double-drop
+    pool.free(0)
+    assert pool.idle_blocks == [a[0]]        # cached -> idle on last release
+    with pytest.raises(RuntimeError, match="not held"):
+        pool.set_cached(a[0])                # caching needs a live holder
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex: content-addressed chain matching (host logic, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_index_chain_lookup_and_divergence():
+    idx = PrefixIndex(4)
+    donor = np.arange(12, dtype=np.int32)    # 3 full blocks
+    for bid, (key, parent, toks) in zip([5, 6, 7], idx.chain(donor)):
+        assert idx.register(key, parent, bid, toks)
+    assert len(idx) == 3
+    # full match walks the whole chain; no continuation block exists
+    ids, n_full, child = idx.lookup(donor)
+    assert ids == [5, 6, 7] and n_full == 3 and child is None
+    # divergence mid block 1: one full block + the divergence block with
+    # its common-token count
+    probe = np.array([0, 1, 2, 3, 4, 5, 99, 99], np.int32)
+    ids, n_full, child = idx.lookup(probe)
+    assert ids == [5] and n_full == 1 and child == (6, 2)
+    # boundary divergence: the continuation block matches 0 extra tokens
+    probe = np.array([0, 1, 2, 3, 99, 99, 99, 99], np.int32)
+    assert idx.lookup(probe) == ([5], 1, (6, 0))
+    # nothing shared at all
+    assert idx.lookup(np.full(8, 77, np.int32)) == ([], 0, (5, 0))
+    # keep-first: a second registration of the same content no-ops
+    key, parent, toks = idx.chain(donor)[0]
+    assert not idx.register(key, parent, 9, toks)
+    assert idx.lookup(donor)[0] == [5, 6, 7]
+
+
+def test_prefix_index_eviction_orphans_descendants():
+    idx = PrefixIndex(4)
+    donor = np.arange(8, dtype=np.int32)
+    for bid, (key, parent, toks) in zip([3, 4], idx.chain(donor)):
+        idx.register(key, parent, bid, toks)
+    idx.drop_block(3)                        # evict the chain head
+    assert len(idx) == 1
+    # the orphaned child is unreachable (its parent key now misses) ...
+    assert idx.lookup(donor) == ([], 0, None)
+    # ... until re-registering the head restores the chain, child and all
+    key, parent, toks = idx.chain(donor)[0]
+    assert idx.register(key, parent, 9, toks)
+    assert idx.lookup(donor) == ([9, 4], 2, None)
+
+
+def test_prefix_index_ctx_keys_the_chain_root():
+    idx = PrefixIndex(4)
+    toks = np.arange(4, dtype=np.int32)
+    ctx_a = np.ones((2, 3), np.float32)
+    ctx_b = np.zeros((2, 3), np.float32)
+    key, parent, blk = idx.chain(toks, ctx_a)[0]
+    idx.register(key, parent, 5, blk)
+    # same tokens under a different (or no) modality context never match
+    assert idx.lookup(toks, ctx_a)[0] == [5]
+    assert idx.lookup(toks, ctx_b) == ([], 0, None)
+    assert idx.lookup(toks, None) == ([], 0, None)
+
+
+# ---------------------------------------------------------------------------
+# prefix caching: cross-arch sharing identity (the §15 tentpole contract)
+# ---------------------------------------------------------------------------
+
+# which sweep archs can share prefixes: recurrent carries and local window
+# rings cannot be rebuilt from cached blocks, so the engine auto-disables
+ELIGIBLE = {"qwen3-4b": True, "recurrentgemma-2b": False,
+            "whisper-tiny": True, "llama-3.2-vision-11b": True,
+            "xlstm-350m": False}
+
+
+def _shared_trace(cfg, seed=13):
+    return synthetic_trace(6, cfg.vocab, seed=seed, prompt_lens=(3, 5),
+                           new_tokens=(3, 5), prefix_frac=0.9, prefix_len=9,
+                           n_ctx_tokens=cfg.n_ctx_tokens,
+                           d_model=cfg.d_model)
+
+
+@pytest.mark.parametrize("name", SWEEP_ARCHS)
+def test_prefix_sharing_identity_sweep(name):
+    """A 90%-shared-prefix trace is token-identical with the prefix cache
+    on vs off, for every paged arch family — and the cache genuinely
+    engages where it is sound (skipped tokens, shared blocks) while the
+    recurrent/window-ring archs take the documented disabled path."""
+    cfg, params = _setup(name)
+    trace = _shared_trace(cfg)
+    off, _ = _run(cfg, params, trace, paged=True, prefix_cache=False)
+    on, eng = _run(cfg, params, trace, paged=True, prefix_cache=True)
+    assert on == off
+    assert eng.prefix_caching == ELIGIBLE[name]
+    if ELIGIBLE[name]:
+        assert eng.stats.prefix_hits > 0
+        assert eng.stats.prefix_tokens > 0
+        assert 0.0 < eng.stats.prefix_hit_rate < 1.0
+        assert eng.stats.blocks_per_request > 0
+        # the trash block is never registered or cached
+        assert 0 not in eng._prefix._by_block
+        assert not eng.blocks.cached(0)
+    else:
+        assert eng.stats.prefix_hits == 0
+        assert eng.stats.cow_copies == 0
+    if eng.blocks is not None:
+        assert eng.blocks.in_use == 0        # only idle cached blocks remain
+
+
+def test_prefix_sharing_identity_packed_residency():
+    """Sharing under packed-weight residency: the cached KV a request maps
+    was produced by the same packed kernels, so identity must hold
+    packed-on == packed-off == float-off."""
+    cfg, params = _setup("qwen2-7b+xnor")
+    trace = _shared_trace(cfg, seed=21)
+    packed_off, _ = _run(cfg, params, trace, paged=True, pack=True,
+                         prefix_cache=False)
+    packed_on, eng = _run(cfg, params, trace, paged=True, pack=True,
+                          prefix_cache=True)
+    float_off, _ = _run(cfg, params, trace, paged=True, pack=False,
+                        prefix_cache=False)
+    assert packed_on == packed_off == float_off
+    assert eng.stats.prefix_hits > 0
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "whisper-tiny"])
+def test_prefix_sharing_identity_i8_cache(name):
+    """Sharing over the fixed-point i8 KV cache: the donor's quantized
+    words are bitwise what the sharer would have written, so identity
+    holds with no requantization drift."""
+    cfg, params = _setup(name)
+    cfg = dataclasses.replace(cfg, kv_cache_dtype="i8")
+    trace = _shared_trace(cfg, seed=8)
+    off, _ = _run(cfg, params, trace, paged=True, prefix_cache=False)
+    on, eng = _run(cfg, params, trace, paged=True, prefix_cache=True)
+    assert on == off
+    assert eng.stats.prefix_hits > 0
+
+
+def test_prefix_sharing_moe_deterministic_replay():
+    """MoE shares prefixes too (its KV is ordinary paged state) but is
+    exempt from identity vs the cache-off path (§14: expert capacity is
+    group-length dependent, and a cache hit legitimately shortens the
+    dispatched group).  The pinned property is determinism: replaying the
+    same shared trace through an identically configured engine — sharing,
+    COW, LRU eviction and all — reproduces the tokens exactly."""
+    cfg, params = _setup("llama4-scout-17b-a16e")
+
+    def run():
+        toks, eng = _run(cfg, params, _shared_trace(cfg, seed=3),
+                         paged=True, slots=2, prefix_cache=True)
+        return toks, eng
+
+    t1, e1 = run()
+    t2, e2 = run()
+    assert t1 == t2
+    assert e1.prefix_caching and e1.stats.prefix_hits > 0
+    assert e1.stats.prefix_hits == e2.stats.prefix_hits
+    assert e1.stats.cow_copies == e2.stats.cow_copies
+
+
+# ---------------------------------------------------------------------------
+# adversarial divergence points: exactly one COW each (EngineStats-pinned)
+# ---------------------------------------------------------------------------
+
+
+def _engine(cfg, params, *, slots=1, s_max=40, prefix_cache=True,
+            n_blocks=0):
+    return ServeEngine(cfg, params, slots=slots, s_max=s_max, paged=True,
+                       prefix_cache=prefix_cache, n_blocks=n_blocks)
+
+
+def _serve(eng, rid, prompt, new=4):
+    eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=new))
+    eng.run()
+    return list(eng.sessions[rid].tokens)
+
+
+def test_prefix_divergence_points_cost_exactly_one_cow():
+    """Divergence at a block boundary, one token after it, mid-block, and
+    a full-prompt hit: each admission maps the donor's blocks, triggers
+    exactly ONE copy-on-write copy, skips to the divergence point, and
+    produces the same tokens as a cache-off engine.  A donor replay after
+    a divergent sharer proves no COW bleed back into shared blocks."""
+    cfg, params = _setup("qwen3-4b")
+    bs = cfg.block_size
+    rng = np.random.default_rng(0)
+    donor = rng.integers(0, cfg.vocab, 3 * bs).astype(np.int32)
+    diff = (donor + 1) % cfg.vocab           # divergent everywhere
+    probes = {
+        "boundary": np.concatenate([donor[:2 * bs], diff[:bs]]),
+        "one_after_boundary": np.concatenate([donor[:2 * bs + 1],
+                                              diff[:bs - 1]]),
+        "mid_block": np.concatenate([donor[:2 * bs + 4], diff[:bs - 4]]),
+        "full_hit": donor.copy(),
+    }
+    expect_skip = {"boundary": 2 * bs, "one_after_boundary": 2 * bs + 1,
+                   "mid_block": 2 * bs + 4, "full_hit": 3 * bs - 1}
+
+    ref = _engine(cfg, params, prefix_cache=False)
+    eng = _engine(cfg, params, prefix_cache=True)
+    donor_ref = _serve(ref, 0, donor)
+    assert _serve(eng, 0, donor) == donor_ref
+    assert eng.stats.cow_copies == 0         # the cold donor never COWs
+    for i, (case, probe) in enumerate(probes.items(), start=1):
+        cow0, skip0 = eng.stats.cow_copies, eng.stats.prefix_tokens
+        toks = _serve(eng, i, probe)
+        assert toks == _serve(ref, i, probe), case
+        assert eng.stats.cow_copies - cow0 == 1, case
+        assert eng.stats.prefix_tokens - skip0 == expect_skip[case], case
+    # no bleed: the donor's cached blocks survived four divergent sharers
+    assert _serve(eng, 99, donor.copy()) == donor_ref
+
+
+def test_prefix_sharing_with_mid_prefill_donor():
+    """A request can share blocks a *still-prefilling* donor has already
+    written (registration follows the one-chunk-per-step dispatch order):
+    the sharer diverges mid-block inside the donor's registered region,
+    costs exactly one COW, and both match their cache-off tokens."""
+    cfg, params = _setup("qwen3-4b")
+    bs, c = cfg.block_size, cfg.prefill_chunk
+    rng = np.random.default_rng(1)
+    donor = rng.integers(0, cfg.vocab, 5 * c).astype(np.int32)
+    probe = np.concatenate([donor[:bs + 4],
+                            (donor[bs + 4:2 * bs] + 1) % cfg.vocab])
+
+    def staggered(prefix_cache):
+        eng = _engine(cfg, params, slots=2, s_max=48,
+                      prefix_cache=prefix_cache)
+        eng.submit(Request(rid=0, prompt=donor, max_new_tokens=4))
+        eng.step()
+        eng.step()          # donor has dispatched 2 chunks -> 2 full blocks
+        eng.submit(Request(rid=1, prompt=probe, max_new_tokens=4))
+        while eng.step():
+            pass
+        return {rid: eng.sessions[rid].tokens for rid in eng.sessions}, eng
+
+    on, eng = staggered(True)
+    off, _ = staggered(False)
+    assert on == off
+    assert eng.stats.cow_copies == 1
+    assert eng.stats.prefix_tokens == bs + 4
+
+
+def test_prefix_disabled_inside_local_window_ring():
+    """The window-ring exception (§15): ring blocks are recycled in place,
+    so their contents are never registrable — a shared-prefix trace on a
+    local-attention arch runs with sharing auto-disabled, zero COWs, and
+    tokens identical to an engine with the cache explicitly off."""
+    cfg, params = _setup("recurrentgemma-2b", local_window=8)
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab, 20).astype(np.int32)
+    trace = [Request(rid=i,
+                     prompt=np.concatenate(
+                         [shared, rng.integers(0, cfg.vocab, 3)
+                          .astype(np.int32)]),
+                     max_new_tokens=4) for i in range(3)]
+    off, _ = _run(cfg, params, trace, paged=True, s_max=32,
+                  prefix_cache=False)
+    on, eng = _run(cfg, params, trace, paged=True, s_max=32,
+                   prefix_cache=True)
+    assert on == off
+    assert not eng.prefix_caching
+    assert eng.stats.cow_copies == 0 and eng.stats.prefix_hits == 0
+
+
+def test_prefix_ctx_mismatch_never_shares():
+    """Identical token prefixes under different modality contexts must not
+    share (the chain root folds a ctx digest): same audio hits, different
+    audio misses, and the same-ctx replay reproduces the same tokens."""
+    cfg, params = _setup("whisper-tiny")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 2 * cfg.block_size).astype(np.int32)
+    ctx_a = rng.standard_normal((cfg.n_ctx_tokens, cfg.d_model)) \
+        .astype(np.float32) * 0.1
+    ctx_b = rng.standard_normal((cfg.n_ctx_tokens, cfg.d_model)) \
+        .astype(np.float32) * 0.1
+    # pool wide enough that neither foreign-ctx admission evicts rid 0's
+    # cached chain before the same-ctx replay arrives
+    eng = _engine(cfg, params, s_max=24, n_blocks=16)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4, ctx=ctx_a))
+    eng.run()
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=4, ctx=ctx_b))
+    eng.run()
+    assert eng.stats.prefix_hits == 0        # different ctx: no sharing
+    eng.submit(Request(rid=2, prompt=prompt, max_new_tokens=4, ctx=ctx_a))
+    eng.run()
+    assert eng.stats.prefix_hits == 1        # same ctx: full-prompt hit
+    assert eng.sessions[2].tokens == eng.sessions[0].tokens
+
+
+def test_prefix_eviction_under_pool_pressure_lru():
+    """A tight pool: cached prefixes are evicted LRU under allocation
+    pressure (never while held), the index entries drop with them, and a
+    later replay of the evicted prompt simply misses — correctness is
+    unchanged, greedy replay reproduces the donor's tokens."""
+    cfg, params = _setup("qwen3-4b")
+    bs = cfg.block_size
+    rng = np.random.default_rng(4)
+    donor = rng.integers(0, cfg.vocab, 2 * bs).astype(np.int32)
+    eng = _engine(cfg, params, s_max=32, n_blocks=5)   # 4 allocatable
+    donor_toks = _serve(eng, 0, donor)
+    assert eng.stats.prefix_cached_blocks > 0
+    # unrelated requests churn the pool until the donor's entries evict
+    for i in range(1, 4):
+        _serve(eng, i, rng.integers(0, cfg.vocab, 2 * bs).astype(np.int32))
+    assert eng.stats.prefix_evictions > 0
+    replay = _serve(eng, 9, donor.copy())
+    assert replay == donor_toks              # miss or hit, tokens identical
+    assert eng.blocks.in_use == 0
+
+
+def test_engine_stats_prefix_quantities():
+    from repro.serve import EngineStats
+
+    st = EngineStats()
+    assert st.prefix_hit_rate == 0.0 and st.blocks_per_request == 0.0
+    st.prompt_tokens, st.prefix_tokens = 40, 10
+    st.prefills, st.fresh_blocks = 4, 6
+    assert st.prefix_hit_rate == pytest.approx(0.25)
+    assert st.blocks_per_request == pytest.approx(1.5)
+
+
+def test_synthetic_trace_prefix_knobs():
+    """prefix_frac/prefix_len: seeded, schedule-independent, and a pure
+    extension — per-request draws are bit-identical to the base trace, the
+    shared group gets the same prefix (and one shared ctx object)."""
+    base = synthetic_trace(8, 256, seed=5, prompt_lens=(4, 6))
+    mixed = synthetic_trace(8, 256, seed=5, prompt_lens=(4, 6),
+                            prefix_frac=0.75, prefix_len=9)
+    again = synthetic_trace(8, 256, seed=5, prompt_lens=(4, 6),
+                            prefix_frac=0.75, prefix_len=9)
+    shared = [r for r, b in zip(mixed, base)
+              if r.prompt.shape[0] == b.prompt.shape[0] + 9]
+    assert 0 < len(shared) < len(mixed)      # a genuine mix at 0.75
+    prefix = shared[0].prompt[:9]
+    for r, b in zip(mixed, base):
+        if r.prompt.shape[0] == b.prompt.shape[0]:     # unshared request
+            assert np.array_equal(r.prompt, b.prompt)
+        else:
+            assert np.array_equal(r.prompt[:9], prefix)
+            assert np.array_equal(r.prompt[9:], b.prompt)
+        assert r.max_new_tokens == b.max_new_tokens
+    for r, r2 in zip(mixed, again):          # fully deterministic
+        assert np.array_equal(r.prompt, r2.prompt)
+    # ctx archs: the shared group shares ONE ctx object (sharing is keyed
+    # per-ctx, so distinct ctx objects would never share)
+    vl = synthetic_trace(8, 256, seed=5, prompt_lens=(4,), n_ctx_tokens=2,
+                         d_model=4, prefix_frac=0.75, prefix_len=9)
+    ctxs = [r.ctx for r in vl if r.prompt.shape[0] == 13]
+    assert all(c is ctxs[0] for c in ctxs)

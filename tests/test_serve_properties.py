@@ -1,0 +1,133 @@
+"""Hypothesis property tests for the serve-layer block bookkeeping.
+
+Random interleavings of alloc / share / COW-drop / free / cache / evict
+against :class:`BlockPool` must preserve the DESIGN.md §15 invariants:
+
+* conservation — free + idle + held partition the allocatable pool;
+* refcount(b) == number of requests holding b (no double-free: a block
+  re-enters the free list exactly once, when its last holder releases);
+* a *writable* block (refcount 1, uncached) has exactly one owner — which
+  is refcount 1 by definition, so sharing can never yield two writers;
+* the trash block 0 is never allocated, shared, cached, idled, or freed;
+* allocation stays lowest-id-first and eviction least-recently-idle-first
+  (the determinism the whole engine inherits).
+
+Mirrors the tests/test_kernels_properties.py pattern: the importorskip
+guard keeps bare environments green (requirements-dev.txt pins hypothesis
+for CI)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import BlockPool  # noqa: E402
+
+
+def _check_invariants(pool: BlockPool, holders: dict, cached: set) -> None:
+    """Cross-check the pool against an independently maintained model."""
+    free = pool.free_blocks
+    idle = set(pool.idle_blocks)
+    held = {b for ids in holders.values() for b in ids}
+    # trash block 0 never surfaces anywhere
+    assert 0 not in free and 0 not in idle and 0 not in held
+    # free / idle / held partition the allocatable pool exactly
+    assert not (set(free) & idle) and not (set(free) & held)
+    assert not (idle & held)
+    assert len(free) + len(idle) + len(held) == pool.capacity
+    assert pool.available == len(free)
+    assert pool.idle == len(idle)
+    assert pool.in_use == len(held)
+    assert pool.reclaimable == len(free) + len(idle)
+    # free list sorted and duplicate-free (free count conserved)
+    assert free == sorted(set(free))
+    # refcounts equal the model's holder counts; idle blocks are cached
+    for bid in range(1, pool.n_blocks):
+        assert pool.refcount(bid) == \
+            sum(bid in ids for ids in holders.values())
+    for bid in idle:
+        assert pool.cached(bid)
+    for bid in cached & held:
+        assert pool.cached(bid)
+
+
+@given(st.integers(3, 20), st.data())
+@settings(max_examples=50, deadline=None)
+def test_block_pool_random_interleavings_preserve_invariants(n_blocks, data):
+    pool = BlockPool(n_blocks)
+    holders: dict[int, list[int]] = {}       # rid -> blocks it holds
+    cached: set[int] = set()
+    next_rid = 0
+    for step in range(data.draw(st.integers(1, 30), label="n_ops")):
+        shareable = sorted(
+            set(b for ids in holders.values() for b in ids)
+            | set(pool.idle_blocks))
+        ops = ["alloc", "free_unknown"]
+        if holders:
+            ops += ["free", "drop", "cache"]
+        if shareable:
+            ops.append("share")
+        if pool.idle:
+            ops.append("evict")
+        op = data.draw(st.sampled_from(ops), label=f"op{step}")
+
+        if op == "alloc":
+            n = data.draw(st.integers(0, pool.available), label="n")
+            expect = pool.free_blocks[:n]    # lowest-id-first, always
+            rid = next_rid
+            next_rid += 1
+            got = pool.alloc(rid, n)
+            assert got == expect
+            if got:
+                holders.setdefault(rid, []).extend(got)
+        elif op == "share":
+            rid = data.draw(
+                st.sampled_from(sorted(holders) + [next_rid]), label="rid")
+            mine = set(holders.get(rid, []))
+            pickable = [b for b in shareable if b not in mine]
+            if pickable:
+                take = data.draw(
+                    st.sets(st.sampled_from(pickable), min_size=1),
+                    label="blocks")
+                if rid == next_rid:
+                    next_rid += 1
+                pool.share(rid, sorted(take))
+                holders.setdefault(rid, []).extend(sorted(take))
+        elif op == "free":
+            rid = data.draw(st.sampled_from(sorted(holders)), label="rid")
+            assert pool.free(rid) == len(holders.pop(rid))
+            assert pool.free(rid) == 0       # no double-free: second is a no-op
+        elif op == "free_unknown":
+            assert pool.free(10_000 + step) == 0
+        elif op == "drop":
+            rid = data.draw(st.sampled_from(sorted(holders)), label="rid")
+            bid = data.draw(st.sampled_from(holders[rid]), label="bid")
+            pool.drop(rid, bid)
+            holders[rid].remove(bid)
+            if not holders[rid]:
+                del holders[rid]
+        elif op == "cache":
+            rid = data.draw(st.sampled_from(sorted(holders)), label="rid")
+            bid = data.draw(st.sampled_from(holders[rid]), label="bid")
+            pool.set_cached(bid)
+            cached.add(bid)
+        elif op == "evict":
+            k = data.draw(st.integers(1, pool.idle), label="k")
+            expect = pool.idle_blocks[:k]    # least-recently-idle-first
+            got = pool.evict_idle(k)
+            assert got == expect
+            for bid in got:
+                assert not pool.cached(bid)
+                cached.discard(bid)
+
+        _check_invariants(pool, holders, cached)
+
+    # drain: releasing every holder leaves zero blocks in use and every
+    # block accounted for (free or parked idle awaiting eviction)
+    for rid in list(holders):
+        pool.free(rid)
+        holders.pop(rid)
+    _check_invariants(pool, holders, cached)
+    assert pool.in_use == 0
+    assert pool.available + pool.idle == pool.capacity
