@@ -176,8 +176,10 @@ class BlockPool:
 
     @property
     def reclaimable(self) -> int:
-        """free + idle: what an admission gate may count on, since idle
-        cached blocks can always be evicted to cover an allocation."""
+        """free + idle: the upper bound an admission gate may count on.
+        Idle blocks a plan itself will :meth:`share` must be excluded by
+        the caller — revival precedes the fresh allocation, so they
+        cannot also be evicted to cover it."""
         return len(self._free) + len(self._idle)
 
     @property
@@ -200,6 +202,11 @@ class BlockPool:
 
     def cached(self, bid: int) -> bool:
         return bid in self._cached
+
+    def is_idle(self, bid: int) -> bool:
+        """True when ``bid`` sits in the idle tier (cached, no holder) —
+        evictable now, but not after a :meth:`share` revives it."""
+        return bid in self._idle
 
     def alloc(self, rid: int, n: int) -> list[int]:
         """n lowest free block ids, charged to request ``rid``."""
@@ -326,6 +333,9 @@ class PrefixIndex:
         self._entries: dict[bytes, tuple[int, np.ndarray]] = {}
         self._children: dict[bytes, list[bytes]] = {}
         self._by_block: dict[int, tuple[bytes, bytes]] = {}
+        # bumped on every mutation: lookup results are valid (and may be
+        # cached by callers) exactly while this stays unchanged
+        self.generation = 0
 
     def __len__(self) -> int:
         return len(self._by_block)
@@ -362,6 +372,7 @@ class PrefixIndex:
         self._entries[key] = (bid, np.array(tokens, np.int32))
         self._children.setdefault(parent, []).append(key)
         self._by_block[bid] = (key, parent)
+        self.generation += 1
         return True
 
     def drop_block(self, bid: int) -> None:
@@ -377,6 +388,7 @@ class PrefixIndex:
         sibs.remove(key)
         if not sibs:
             del self._children[parent]
+        self.generation += 1
 
     def lookup(self, prompt, ctx=None):
         """Longest registered chain of full blocks, plus the best partial
@@ -697,6 +709,8 @@ class ServeEngine:
         # slots mid-chunked-prefill: slot -> _PrefillProgress (paged only;
         # dense prefill is a single exact-length program, nothing to slice)
         self._prefilling: dict[int, _PrefillProgress] = {}
+        # memoized FIFO-head prefix plan: ((rid, index generation), plan)
+        self._plan_cache: tuple[tuple[int, int], tuple] | None = None
 
     def _build_paged_programs(self):
         """Per-engine jits so trace counts are observable: the python side
@@ -903,19 +917,48 @@ class ServeEngine:
             self.stats.prefix_cached_blocks = len(self._prefix)
         return self.blocks.alloc(rid, n)
 
+    def _head_plan(self, req: Request) -> tuple[list[int], int, int | None]:
+        """The FIFO head's prefix plan, memoized on (rid, index
+        generation): a head blocked on blocks or slots is re-polled every
+        engine step, and the plan — an O(P) chain hash plus child scans —
+        only changes when the index does (revival/idling of blocks moves
+        residency tiers, never index contents)."""
+        if self._prefix is None:
+            return self._prefix_plan(req)
+        tag = (req.rid, self._prefix.generation)
+        if self._plan_cache is None or self._plan_cache[0] != tag:
+            self._plan_cache = (tag, self._prefix_plan(req))
+        return self._plan_cache[1]
+
     def _admissible_paged(self) -> tuple | None:
         """The FIFO head's prefix plan when it can be admitted, else None.
         OOM backpressure gates on *fresh* blocks needed (shared blocks are
         free) against free + evictable-idle — the head waits, no skipping
-        (determinism and no starvation)."""
+        (determinism and no starvation).
+
+        Idle blocks the plan itself shares don't count as evictable: admit
+        revives them (refcount 1) before allocating, so they can't also
+        cover the fresh need.  When that deficit is the only thing blocking
+        the head and nothing is in flight — no active request will ever
+        free another block, so waiting would deadlock — the head degrades
+        to a wholly-fresh plan, which :meth:`submit`'s capacity check
+        guarantees fits once the idle tier is evicted."""
         head = self.pool.peek()
         if head is None or not self.pool.free_slots:
             return None
-        plan = self._prefix_plan(head.request)
+        plan = self._head_plan(head.request)
         if self.blocks is None:
             return plan
         need = sum(self._fresh_needed(head.request, plan).values())
-        return plan if need <= self.blocks.reclaimable else None
+        revived = sum(1 for b in plan[0] if self.blocks.is_idle(b))
+        if need <= self.blocks.reclaimable - revived:
+            return plan
+        if plan[0] and not self.pool.active:
+            fresh = ([], 0, None)
+            n = sum(self._fresh_needed(head.request, fresh).values())
+            if n <= self.blocks.reclaimable:
+                return fresh
+        return None
 
     def _slot_table_rows(self, slot: int) -> dict:
         return {c: jnp.asarray(t[slot:slot + 1])

@@ -703,6 +703,81 @@ def test_prefix_eviction_under_pool_pressure_lru():
     assert eng.blocks.in_use == 0
 
 
+def test_prefix_gate_excludes_blocks_the_plan_itself_revives():
+    """Admission must not count idle blocks the plan's own share() will
+    revive as evictable: a donor finishes leaving its 2-block prefix idle
+    in a 4-block pool, then a same-prompt request needing 4 blocks total
+    arrives.  Sharing would revive both idle blocks and leave only 2
+    evictable for 3 fresh — the old gate passed it (need 3 <= reclaimable
+    4) and crashed evict_idle mid-run.  With nothing in flight the head
+    degrades to a wholly-fresh plan instead of deadlocking, and the
+    tokens match a cache-off engine."""
+    cfg, params = _setup("qwen3-4b")
+    bs = cfg.block_size
+    rng = np.random.default_rng(11)
+    donor = rng.integers(0, cfg.vocab, 2 * bs).astype(np.int32)
+    ref = _engine(cfg, params, prefix_cache=False)
+    eng = _engine(cfg, params, n_blocks=5)     # 4 allocatable
+    assert _serve(eng, 0, donor, new=1) == _serve(ref, 0, donor, new=1)
+    assert eng.blocks.idle == 2                # prefix parked, pool drained
+    new = 2 * bs + 1                           # 4 blocks total, 3 fresh
+    toks = _serve(eng, 1, donor.copy(), new=new)
+    assert toks == _serve(ref, 1, donor.copy(), new=new)
+    assert all(s.done for s in eng.sessions.values())
+    assert eng.blocks.in_use == 0
+
+
+def test_prefix_sharer_allocates_under_pressure_while_prefix_idle():
+    """The sharer itself allocates under pool pressure while its shared
+    prefix sits idle: sharing survives (the plan fits once its revived
+    blocks are excluded from the evictable count) and the fresh
+    allocation evicts an unrelated idle block — not the revived prefix —
+    with no crash and cache-off-identical tokens."""
+    cfg, params = _setup("qwen3-4b")
+    bs = cfg.block_size
+    rng = np.random.default_rng(12)
+    donor = rng.integers(0, cfg.vocab, 2 * bs).astype(np.int32)
+    other = rng.integers(0, cfg.vocab, 2 * bs).astype(np.int32)
+    ref = _engine(cfg, params, prefix_cache=False)
+    eng = _engine(cfg, params, n_blocks=7)     # 6 allocatable
+    assert _serve(eng, 0, donor, new=1) == _serve(ref, 0, donor, new=1)
+    assert _serve(eng, 1, other, new=1) == _serve(ref, 1, other, new=1)
+    assert eng.blocks.idle == 4 and eng.blocks.available == 2
+    new = 2 * bs + 1           # 3 fresh after the COW credit, 2 free
+    hits0, evict0 = eng.stats.prefix_hits, eng.stats.prefix_evictions
+    toks = _serve(eng, 2, donor.copy(), new=new)
+    assert toks == _serve(ref, 2, donor.copy(), new=new)
+    assert eng.stats.prefix_hits == hits0 + 1          # sharing survived
+    assert eng.stats.prefix_evictions == evict0 + 1    # one unrelated evict
+    assert eng.blocks.in_use == 0
+
+
+def test_blocked_head_plan_recomputed_only_on_index_change():
+    """While the FIFO head waits (here: on the single slot), its prefix
+    plan is memoized on the index generation instead of re-hashing the
+    whole prompt every engine step."""
+    cfg, params = _setup("qwen3-4b")
+    bs = cfg.block_size
+    rng = np.random.default_rng(13)
+    eng = _engine(cfg, params, slots=1)
+    calls = 0
+    orig = eng._prefix_plan
+
+    def counting(req):
+        nonlocal calls
+        calls += 1
+        return orig(req)
+
+    eng._prefix_plan = counting
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab, bs)
+                       .astype(np.int32), max_new_tokens=24))
+    eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab, bs)
+                       .astype(np.int32), max_new_tokens=2))
+    eng.run()
+    assert eng.stats.decode_steps >= 20      # rid 1 was head for many steps
+    assert calls <= 4                        # not once per step
+
+
 def test_engine_stats_prefix_quantities():
     from repro.serve import EngineStats
 

@@ -46,6 +46,7 @@ def _check_invariants(pool: BlockPool, holders: dict, cached: set) -> None:
     for bid in range(1, pool.n_blocks):
         assert pool.refcount(bid) == \
             sum(bid in ids for ids in holders.values())
+        assert pool.is_idle(bid) == (bid in idle)
     for bid in idle:
         assert pool.cached(bid)
     for bid in cached & held:
