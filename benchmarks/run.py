@@ -10,7 +10,8 @@ import traceback
 
 from benchmarks import (bank_scaling, fig4_functional, fig5_montecarlo,
                         fig6_xnornet, incremental_verify, roofline_bench,
-                        serve_throughput, table1_latency, verify_throughput)
+                        serve_throughput, serve_workloads, table1_latency,
+                        verify_throughput)
 
 SUITES = [
     ("fig4", fig4_functional),
@@ -21,6 +22,7 @@ SUITES = [
     ("incremental", incremental_verify),
     ("banks", bank_scaling),
     ("serve", serve_throughput),
+    ("workloads", serve_workloads),
     ("roofline", roofline_bench),
 ]
 

@@ -20,13 +20,14 @@ from repro.configs.moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
 from repro.configs.recurrentgemma_2b import CONFIG as recurrentgemma_2b
 from repro.configs.llama_3_2_vision_11b import CONFIG as llama_3_2_vision_11b
 from repro.configs.whisper_tiny import CONFIG as whisper_tiny
+from repro.configs.xnor_cnn import CONFIG as xnor_cnn
 
 ALL: dict[str, ArchConfig] = {
     c.name: c
     for c in [
         qwen2_7b, qwen3_4b, phi4_mini_3_8b, qwen3_14b, xlstm_350m,
         llama4_scout_17b_a16e, moonshot_v1_16b_a3b, recurrentgemma_2b,
-        llama_3_2_vision_11b, whisper_tiny,
+        llama_3_2_vision_11b, whisper_tiny, xnor_cnn,
     ]
 }
 

@@ -93,6 +93,11 @@ class ArchConfig:
     def is_encdec(self) -> bool:
         return self.encoder_layers > 0
 
+    def encoder_segments(self) -> list[tuple[str, int]]:
+        """Encoder depth plan for enc-dec archs ([] otherwise).  Kind names
+        are config data here — consumers stay generic over them."""
+        return [("enc", self.encoder_layers)] if self.is_encdec() else []
+
     # --- derived ------------------------------------------------------------
     @property
     def q_per_kv(self) -> int:

@@ -1,0 +1,33 @@
+"""The paper's own workload as an arch: an XNOR-Net binary-dense image
+classifier served through the LM machinery (Fig. 1(c) / §VI, Fig. 6).
+
+Tiny by construction — the full config is already smoke-scale, because the
+paper's classifier is a few binary dense layers over 16x16 images.  The
+class ids are vocab ids: a request is one QUERY_TOKEN prompt with the
+image patches as ctx, ``max_new_tokens=1``, greedy sampling — the emitted
+token IS the classification (repro.serve.workloads.ClassifierService).
+"""
+
+from repro.models import bcnn  # noqa: F401  (registers the "bindense" kind)
+from repro.configs.base import ArchConfig
+
+import jax.numpy as jnp
+
+CONFIG = ArchConfig(
+    name="xnor-cnn",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab=bcnn.VOCAB,
+    pattern=("bindense",),
+    n_ctx_tokens=4,                # 16x16 image -> 4 bands of 64 pixels
+    quant="xnor",                  # the binary path IS the workload
+    dtype=jnp.float32,             # tiny model; exact packed-vs-float logits
+    block_size=8,
+    prefill_chunk=8,
+    notes="XNOR-CNN stripe classifier; bindense kind registered by "
+          "repro.models.bcnn",
+)

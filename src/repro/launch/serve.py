@@ -13,9 +13,19 @@ engine's content-addressed prefix cache (DESIGN.md §15) then skips the
 shared blocks' prefill and reports hit rate + fresh blocks per request.
 ``--no-prefix-cache`` A/Bs it off.
 
-Example:
+``--workload`` picks what to serve (DESIGN.md §16).  ``lm`` (default) is
+the synthetic chat trace above; ``transcribe`` streams synthetic audio
+through :class:`TranscriptionService` on an enc-dec arch; ``classify``
+batches stripe images through :class:`ClassifierService` (defaults to the
+paper's xnor-cnn arch, trained in-process).
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b+xnor \
       --smoke --slots 4 --requests 16 --new-tokens 16 --prefix-len 64
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper-tiny \
+      --smoke --workload transcribe --streams 3 --windows 2
+  PYTHONPATH=src python -m repro.launch.serve --arch xnor-cnn \
+      --workload classify --requests 32
 """
 
 from __future__ import annotations
@@ -29,8 +39,58 @@ import numpy as np
 
 import repro.configs as configs
 from repro.models import lm
-from repro.serve import ServeEngine, synthetic_trace
+from repro.serve import (ClassifierService, ServeEngine,
+                         TranscriptionService, synthetic_audio_trace,
+                         synthetic_trace)
 from repro.train import serve_step
+
+
+def _run_transcribe(cfg, params, args) -> int:
+    """Streaming transcription over synthetic audio (DESIGN.md §16)."""
+    svc = TranscriptionService(
+        cfg, params, slots=args.slots,
+        s_max=args.s_max or 32,
+        tokens_per_window=max(2, args.new_tokens),
+        temperature=args.temperature, seed=args.seed,
+        pack=not args.no_pack)
+    streams = synthetic_audio_trace(
+        args.streams, args.windows, n_ctx_tokens=cfg.n_ctx_tokens,
+        d_model=cfg.d_model, seed=args.seed)
+    t0 = time.time()
+    transcripts = svc.transcribe(streams)
+    dt = time.time() - t0
+    total = sum(len(t) for t in transcripts.values())
+    print(f"arch={cfg.name} workload=transcribe streams={args.streams} "
+          f"windows={args.windows} slots={args.slots}")
+    print(f"  {total} transcript tokens in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s; "
+          f"{svc.stats.prefills} window sessions, "
+          f"{svc.stats.decode_steps} decode steps)")
+    for sid in sorted(transcripts):
+        print(f"  stream {sid}: {transcripts[sid][:12]}"
+              f"{'...' if len(transcripts[sid]) > 12 else ''}")
+    return 0
+
+
+def _run_classify(cfg, args) -> int:
+    """Batched XNOR-CNN classification (DESIGN.md §16, paper Fig. 6)."""
+    from repro.models import bcnn
+
+    svc = ClassifierService(cfg=cfg, slots=args.slots,
+                            pack=not args.no_pack, seed=args.seed)
+    n = max(args.requests, 1)
+    imgs, y = bcnn.synthetic_images(jax.random.PRNGKey(args.seed + 1), n)
+    t0 = time.time()
+    pred = svc.classify(np.asarray(imgs))
+    dt = time.time() - t0
+    acc = float(np.mean(pred == np.asarray(y)))
+    print(f"arch={cfg.name} workload=classify images={n} "
+          f"slots={args.slots} packed={not args.no_pack}")
+    print(f"  train acc {svc.train_acc:.2f}; serve acc {acc:.2f}; "
+          f"{n / max(dt, 1e-9):.1f} images/s "
+          f"({svc.stats.prefills} one-shot sessions, "
+          f"{svc.stats.decode_steps} decode steps)")
+    return 0
 
 
 def main() -> int:
@@ -67,13 +127,28 @@ def main() -> int:
     ap.add_argument("--prefix-frac", type=float, default=0.9,
                     help="fraction of requests opening with the shared "
                          "prefix (with --prefix-len)")
+    ap.add_argument("--workload", choices=("lm", "transcribe", "classify"),
+                    default="lm",
+                    help="what to serve: chat trace, streaming "
+                         "transcription, or image classification")
+    ap.add_argument("--streams", type=int, default=3,
+                    help="audio streams (--workload transcribe)")
+    ap.add_argument("--windows", type=int, default=2,
+                    help="windows per stream (--workload transcribe)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+
+    if args.workload == "classify":
+        return _run_classify(cfg, args)
+
     init_key, _ = jax.random.split(jax.random.PRNGKey(args.seed))
     params = lm.init_params(cfg, init_key)
+
+    if args.workload == "transcribe":
+        return _run_transcribe(cfg, params, args)
     pl = max(4, args.prompt_len)
     nt = max(2, args.new_tokens)
     trace = synthetic_trace(

@@ -30,6 +30,14 @@ Paged serving (DESIGN.md §14) adds a parallel surface:
                                         axis) from dense per-slot leaves
   decode(..., table=)                   gather/scatter through a block table
   chunk(...)                           one chunked-prefill piece (B=1, S=C)
+
+Each kind declares a :class:`BlockContract` (DESIGN.md §16) naming its
+state layout, table class, and prefix-shareability; the paged surface is
+*generated* from that contract by :class:`PagedLayout`, and every
+consumer — the segment machinery below, ``lm.py``'s builders, the serve
+scheduler's gates — reads contracts instead of matching kind strings.
+New kinds register through ``repro.models.registry`` and plug into all
+of it without edits here.
 """
 
 from __future__ import annotations
@@ -42,9 +50,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.ctx import constrain
 from repro.models import attention as attn_mod
-from repro.models import layers, moe, ssm
+from repro.models import layers, moe, registry, ssm
 from repro.models.attention import KVCache, PagedKVCache
 from repro.models.params import ParamDef
+from repro.models.registry import BlockContract, register
 
 
 class FwdOpts(NamedTuple):
@@ -106,35 +115,78 @@ def _kv_from_seq(cfg, k, v, s_max, rolling: bool = False):
     return KVCache(ck.astype(cfg.dtype), cv.astype(cfg.dtype))
 
 
-class _PerSlotPaged:
-    """Paged-mode defaults for blocks whose decode state is dense per-slot
-    (recurrent state, cross-attn ctx_kv): the paged layout keeps the state
-    exactly as the dense layout does — documented exception in DESIGN.md §14
-    (recurrent state is O(1) per slot; there is nothing block-granular to
-    page)."""
+class PagedLayout:
+    """Contract-driven paged-serving surface.
 
-    paged_kv = False
+    The whole ``paged_state_spec``/``paged_split``/``paged_merge`` triple
+    is derived from the kind's declared :class:`BlockContract` instead of
+    hand-copied per class:
+
+      ``paged_kv`` only         state IS the shared pool (KV caches become
+                                PagedKVCache pools, no batch axis)
+      ``per_slot_state`` only   paged layout == dense layout — documented
+                                exception in DESIGN.md §14 (recurrent state
+                                is O(1) per slot; nothing block-granular to
+                                page)
+      both                      state is a (pool, per_slot) pair (Whisper
+                                decoder: self-attn pool + ctx_kv)
+      neither                   stateless; None flows through everything
+
+    Kinds with ``paged_kv`` may override :meth:`pool_spec` (default: one
+    PagedKVCache pool honoring ``kv_cache_dtype``); kinds with
+    ``per_slot_state`` may override :meth:`slot_spec` (default: the dense
+    ``state_spec``, correct whenever the dense state is entirely per-slot).
+    """
+
+    @classmethod
+    def pool_spec(cls, cfg, n_blocks, block_size, abstract):
+        mk = PagedKVCache.abstract if abstract else PagedKVCache.zeros
+        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
+        return mk(cfg, n_blocks, block_size, dtype=dt)
+
+    @classmethod
+    def slot_spec(cls, cfg, batch, s_max, abstract):
+        return cls.state_spec(cfg, batch, s_max, abstract)
 
     @classmethod
     def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
                          abstract):
-        return cls.state_spec(cfg, batch, s_max, abstract)
+        c = cls.contract
+        if c.paged_kv and c.per_slot_state:
+            return (cls.pool_spec(cfg, n_blocks, block_size, abstract),
+                    cls.slot_spec(cfg, batch, s_max, abstract))
+        if c.paged_kv:
+            return cls.pool_spec(cfg, n_blocks, block_size, abstract)
+        if c.per_slot_state:
+            return cls.slot_spec(cfg, batch, s_max, abstract)
+        return None
 
     @classmethod
     def paged_split(cls, state):
         """-> (shared pool leaves, per-slot leaves)."""
+        c = cls.contract
+        if c.paged_kv and c.per_slot_state:
+            return state[0], state[1]
+        if c.paged_kv:
+            return state, None
         return None, state
 
     @classmethod
     def paged_merge(cls, shared, per_slot):
+        c = cls.contract
+        if c.paged_kv and c.per_slot_state:
+            return (shared, per_slot)
+        if c.paged_kv:
+            return shared
         return per_slot
 
 
-class AttnBlock:
-    kind = "attn"
+@register
+class AttnBlock(PagedLayout):
+    contract = BlockContract("attn", paged_kv=True, table_class="full",
+                             prefix_shareable=True)
     causal = True
     window = 0
-    paged_kv = True
 
     @classmethod
     def defs(cls, cfg, n):
@@ -199,21 +251,6 @@ class AttnBlock:
         return mk(cfg, batch, cap, dtype=dt)
 
     @classmethod
-    def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
-                         abstract):
-        mk = PagedKVCache.abstract if abstract else PagedKVCache.zeros
-        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
-        return mk(cfg, n_blocks, block_size, dtype=dt)
-
-    @classmethod
-    def paged_split(cls, state):
-        return state, None
-
-    @classmethod
-    def paged_merge(cls, shared, per_slot):
-        return shared
-
-    @classmethod
     def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
         """ba = batch mesh axes; kv_shard: "heads" (TP over KV heads) or
         "seq" (sequence-parallel cache — the softmax reduces over shards,
@@ -225,18 +262,26 @@ class AttnBlock:
         return KVCache(spec, spec)
 
 
+@register
 class LocalBlock(AttnBlock):
-    kind = "local"
+    # a window ring recycles physical blocks in place — never shareable
+    contract = BlockContract("local", paged_kv=True, table_class="win",
+                             window=True)
     window = 1
 
 
+@register
 class EncBlock(AttnBlock):
-    kind = "enc"
+    # encoder-only: runs inside lm.encode, never in the decode path
+    contract = BlockContract("enc", paged_kv=True, table_class="full",
+                             decodes=False)
     causal = False
 
 
+@register
 class MoeBlock(AttnBlock):
-    kind = "moe"
+    contract = BlockContract("moe", paged_kv=True, table_class="full",
+                             prefix_shareable=True, routed_experts=True)
 
     @classmethod
     def defs(cls, cfg, n):
@@ -249,8 +294,12 @@ class MoeBlock(AttnBlock):
         return x + y, aux
 
 
-class CrossBlock(_PerSlotPaged):
-    kind = "cross"
+@register
+class CrossBlock(PagedLayout):
+    # ctx_kv is a pure function of the request's context — rebuilding a
+    # shared prefix cannot go stale, so sharing is safe (DESIGN.md §15)
+    contract = BlockContract("cross", per_slot_state=True,
+                             prefix_shareable=True)
 
     @classmethod
     def defs(cls, cfg, n):
@@ -304,9 +353,11 @@ class CrossBlock(_PerSlotPaged):
         return (P(ba, None, None, None),) * 2
 
 
-class DecBlock:
+@register
+class DecBlock(PagedLayout):
     """Whisper decoder block: self-attn + cross-attn(encoder) + FFN."""
-    kind = "dec"
+    contract = BlockContract("dec", paged_kv=True, per_slot_state=True,
+                             table_class="full", prefix_shareable=True)
 
     @classmethod
     def defs(cls, cfg, n):
@@ -369,7 +420,8 @@ class DecBlock:
         return x, (self_cache, ctx_kv)
 
     @classmethod
-    def _ctx_kv_spec(cls, cfg, batch, abstract):
+    def slot_spec(cls, cfg, batch, s_max, abstract):
+        # the per-slot half is just ctx_kv; the self-cache pages
         shp = (batch, cfg.n_ctx_tokens, cfg.n_kv_heads, cfg.d_head)
         if abstract:
             return (jax.ShapeDtypeStruct(shp, cfg.dtype),) * 2
@@ -383,25 +435,7 @@ class DecBlock:
         # decode_attention skips the fixed-point correction)
         dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
         return (mk(cfg, batch, s_max, dtype=dt),
-                cls._ctx_kv_spec(cfg, batch, abstract))
-
-    paged_kv = True
-
-    @classmethod
-    def paged_state_spec(cls, cfg, batch, s_max, n_blocks, block_size,
-                         abstract):
-        mk = PagedKVCache.abstract if abstract else PagedKVCache.zeros
-        dt = jnp.int8 if cfg.kv_cache_dtype == "i8" else cfg.dtype
-        return (mk(cfg, n_blocks, block_size, dtype=dt),
-                cls._ctx_kv_spec(cfg, batch, abstract))
-
-    @classmethod
-    def paged_split(cls, state):
-        return state[0], state[1]
-
-    @classmethod
-    def paged_merge(cls, shared, per_slot):
-        return (shared, per_slot)
+                cls.slot_spec(cfg, batch, s_max, abstract))
 
     @classmethod
     def state_pspec(cls, cfg, ba, kv_shard: str = "heads", tp_size: int = 16):
@@ -413,8 +447,9 @@ class DecBlock:
 # recurrent blocks
 # ---------------------------------------------------------------------------
 
-class RglruBlock(_PerSlotPaged):
-    kind = "rglru"
+@register
+class RglruBlock(PagedLayout):
+    contract = BlockContract("rglru", per_slot_state=True)
 
     @classmethod
     def defs(cls, cfg, n):
@@ -505,8 +540,9 @@ class RglruBlock(_PerSlotPaged):
         return (ssm.RGLRUState(P(ba, "model")), P(ba, None, "model"))
 
 
-class MlstmBlock(_PerSlotPaged):
-    kind = "mlstm"
+@register
+class MlstmBlock(PagedLayout):
+    contract = BlockContract("mlstm", per_slot_state=True)
 
     @classmethod
     def _di(cls, cfg):
@@ -636,8 +672,9 @@ class MlstmBlock(_PerSlotPaged):
                 P(ba, None, "model"))
 
 
-class SlstmBlock(_PerSlotPaged):
-    kind = "slstm"
+@register
+class SlstmBlock(PagedLayout):
+    contract = BlockContract("slstm", per_slot_state=True)
 
     @classmethod
     def defs(cls, cfg, n):
@@ -707,9 +744,10 @@ class SlstmBlock(_PerSlotPaged):
         return ssm.SLSTMState(*(P(ba, "model"),) * 4)
 
 
-KINDS: dict[str, Any] = {c.kind: c for c in
-                         [AttnBlock, LocalBlock, EncBlock, MoeBlock, CrossBlock,
-                          DecBlock, RglruBlock, MlstmBlock, SlstmBlock]}
+# Live view of the registry (satellite kinds registered after import — e.g.
+# bcnn's "bindense" — appear here too).  Kept for back-compat; new code
+# should go through ``registry.get`` / ``registry.contract``.
+KINDS: dict[str, Any] = registry.view()
 
 
 # ---------------------------------------------------------------------------
@@ -717,7 +755,7 @@ KINDS: dict[str, Any] = {c.kind: c for c in
 # ---------------------------------------------------------------------------
 
 def segment_defs(cfg, segments=None) -> list:
-    return [(kind, n, KINDS[kind].defs(cfg, n))
+    return [(kind, n, registry.get(kind).defs(cfg, n))
             for kind, n in (segments or cfg.segments())]
 
 
@@ -734,7 +772,7 @@ def segment_fwd(cfg, seg_params: list, x, ctx=None,
     aux_total = jnp.float32(0.0)
     states = []
     for (kind, n), p in seg_params:
-        block = KINDS[kind]
+        block = registry.get(kind)
 
         def body(carry, pl, _block=block):
             xc, aux = carry
@@ -761,10 +799,11 @@ def segment_fwd(cfg, seg_params: list, x, ctx=None,
 
 
 def _block_table(block, tables):
-    """The block's (B, W) table under paged serving, else None."""
-    if tables is None or not getattr(block, "paged_kv", False):
+    """The block's (B, W) table under paged serving, else None — resolved
+    through the kind's declared table class, not its name."""
+    if tables is None or not block.contract.paged_kv:
         return None
-    return tables["win" if getattr(block, "window", 0) else "full"]
+    return tables[block.contract.table_class]
 
 
 def _freeze_inactive(block, old, new, active):
@@ -797,7 +836,7 @@ def segment_decode(cfg, seg_params: list, x, states: list, pos, ctx=None,
     valid = None if active is None else active[:, None]
     new_states = []
     for ((kind, n), p), st in zip(seg_params, states):
-        block = KINDS[kind]
+        block = registry.get(kind)
         table = _block_table(block, tables)
 
         def body(xc, pst, _block=block, _table=table):
@@ -835,7 +874,7 @@ def segment_chunk(cfg, seg_params: list, x, states: list, slot, pos0,
     """
     new_states = []
     for ((kind, n), p), st in zip(seg_params, states):
-        block = KINDS[kind]
+        block = registry.get(kind)
         table = _block_table(block, tables)
         shared, per_slot = block.paged_split(st)
         ps_slot = None
@@ -881,7 +920,7 @@ def segment_copy_block(cfg, states: list, src, dst):
     """
     out = []
     for (kind, _), st in zip(cfg.segments(), states):
-        block = KINDS[kind]
+        block = registry.get(kind)
         shared, per_slot = block.paged_split(st)
         if shared is not None:
             shared = shared.copy_block(src, dst)
@@ -893,7 +932,7 @@ def segment_states(cfg, segments, batch, s_max, abstract: bool):
     """Stacked decode states per segment (leading axis = layers in segment)."""
     out = []
     for kind, n in segments:
-        block = KINDS[kind]
+        block = registry.get(kind)
         one = block.state_spec(cfg, batch, s_max, abstract)
         if abstract:
             stacked = jax.tree.map(
@@ -913,7 +952,7 @@ def segment_paged_states(cfg, segments, batch, s_max, n_blocks: int,
     layout (DESIGN.md §14)."""
     out = []
     for kind, n in segments:
-        block = KINDS[kind]
+        block = registry.get(kind)
         one = block.paged_state_spec(cfg, batch, s_max, n_blocks, block_size,
                                      abstract)
         if abstract:
@@ -931,7 +970,7 @@ def segment_state_pspecs(cfg, segments, ba, kv_shard: str = "heads",
     """PartitionSpecs matching segment_states (stack axis unsharded)."""
     out = []
     for kind, n in segments:
-        one = KINDS[kind].state_pspec(cfg, ba, kv_shard, tp_size)
+        one = registry.get(kind).state_pspec(cfg, ba, kv_shard, tp_size)
         out.append(jax.tree.map(lambda s: P(None, *s), one,
                                 is_leaf=lambda x: isinstance(x, P)))
     return out

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.models import blocks, layers
 from repro.models import params as pdefs
+from repro.models import registry
 from repro.models.blocks import FwdOpts
 
 
@@ -33,7 +34,7 @@ def param_defs(cfg) -> dict:
     for i, (kind, n, d) in enumerate(blocks.segment_defs(cfg)):
         defs[f"seg{i}_{kind}"] = d
     if cfg.is_encdec():
-        enc_segs = [("enc", cfg.encoder_layers)]
+        enc_segs = cfg.encoder_segments()
         for i, (kind, n, d) in enumerate(blocks.segment_defs(cfg, enc_segs)):
             defs[f"enc{i}_{kind}"] = d
         defs["enc_norm"] = pdefs.ParamDef((cfg.d_model,), (None,),
@@ -81,8 +82,9 @@ def active_param_count(cfg) -> int:
     inactive = cfg.vocab * cfg.d_model          # embedding table
     if cfg.n_experts:
         per_expert = 3 * cfg.d_model * cfg.d_ff_expert
-        n_moe = sum(1 for k in cfg.layer_kinds() if k == "moe")
-        inactive += n_moe * (cfg.n_experts - cfg.top_k) * per_expert
+        n_routed = sum(1 for k in cfg.layer_kinds()
+                       if registry.contract(k).routed_experts)
+        inactive += n_routed * (cfg.n_experts - cfg.top_k) * per_expert
     return total - inactive
 
 
@@ -94,7 +96,7 @@ def model_flops(cfg, kind: str, tokens: int) -> float:
 
 def _seg_params(cfg, params, enc: bool = False):
     """[( (kind, n), stacked-params ), ...] in depth order."""
-    segs = [("enc", cfg.encoder_layers)] if enc else cfg.segments()
+    segs = cfg.encoder_segments() if enc else cfg.segments()
     prefix = "enc" if enc else "seg"
     out = []
     for i, (kind, n) in enumerate(segs):
@@ -194,21 +196,26 @@ def paged_table_widths(cfg, s_max: int, block_size: int,
                        prefill_chunk: int) -> dict:
     """Block-table widths per cache class for the paged serve layout.
 
-    ``"full"`` covers attn/moe/dec self-caches (monotone tables of
-    ``ceil(s_max / bs)`` blocks); ``"win"`` covers local sliding-window
-    layers — a block *ring* whose capacity ``W * bs >= window + C - 1``
-    guarantees that scatter-then-attend chunked prefill (chunk size C)
-    never overwrites an in-window key.  Archs with no KV cache at all
-    (pure recurrent) return {}.
+    Each decoder kind with a paged pool declares (via its BlockContract)
+    which table class addresses it and whether that table is a window
+    *ring*.  Monotone classes get ``ceil(s_max / bs)`` blocks; ring
+    classes get capacity ``W * bs >= window + C - 1``, which guarantees
+    that scatter-then-attend chunked prefill (chunk size C) never
+    overwrites an in-window key.  Kinds sharing a class take the max
+    width.  Archs with no KV cache at all (pure recurrent) return {}.
     """
-    kinds = {k for k, _ in cfg.segments()}
     bs = block_size
-    widths = {}
-    if kinds & {"attn", "moe", "dec"}:
-        widths["full"] = -(-s_max // bs)
-    if "local" in kinds:
-        cap = min(s_max, cfg.local_window + max(prefill_chunk, 1) - 1)
-        widths["win"] = -(-cap // bs)
+    widths: dict[str, int] = {}
+    for kind, _ in cfg.segments():
+        c = registry.contract(kind)
+        if not c.paged_kv:
+            continue
+        if c.window:
+            cap = min(s_max, cfg.local_window + max(prefill_chunk, 1) - 1)
+        else:
+            cap = s_max
+        w = -(-cap // bs)
+        widths[c.table_class] = max(widths.get(c.table_class, 0), w)
     return widths
 
 
@@ -343,23 +350,44 @@ def prefix_cache_eligible(cfg) -> bool:
     """Whether prefix sharing over the paged pools is sound for this arch.
 
     Sharing reconstructs a request's entire sequential state from cached
-    blocks, so every decoder segment's state must live in the paged pools
-    (ctx_kv does not count against this: it is recomputed from the
-    per-request ctx on every chunk).  Two documented exceptions
+    blocks, so every decoder kind must declare ``prefix_shareable`` in its
+    BlockContract — **fail-closed**: a kind that says nothing is
+    ineligible, and one such kind anywhere in the stack disables sharing
+    for the arch.  The built-in kinds that (correctly) don't declare it
     (DESIGN.md §15):
 
     * recurrent kinds (rglru/mlstm/slstm) carry dense per-slot state that
       is not block-granular — a skipped prefix would leave the carry cold;
     * local sliding-window layers use block *rings* whose physical blocks
       are recycled in place, so their contents are never stable enough to
-      register, and a resumed chunk could not rebuild the in-window keys.
+      register, and a resumed chunk could not rebuild the in-window keys
+      (the registry rejects a window+shareable contract outright).
 
-    MoE remains eligible: its KV is ordinary paged attention state (the
-    §14 capacity-grouping caveat exempts it from cross-path token identity,
+    MoE declares it: its KV is ordinary paged attention state (the §14
+    capacity-grouping caveat exempts it from cross-path token identity,
     not from sharing).
     """
     kinds = {k for k, _ in cfg.segments()}
-    return bool(kinds) and kinds <= {"attn", "moe", "dec", "cross"}
+    return bool(kinds) and all(registry.contract(k).prefix_shareable
+                               for k in kinds)
+
+
+def prefix_table_class(cfg) -> str | None:
+    """The block-table class shared prefixes are registered under.
+
+    Prefix sharing maps *stable* cached blocks between requests, so the
+    share class is the table class addressed by the arch's shareable paged
+    kinds.  Returns None (sharing off) when the arch has no such class or
+    its shareable pools span several classes — the registration protocol
+    hashes one table row per request, so a single class must cover every
+    pool being rebuilt.
+    """
+    classes = set()
+    for kind, _ in cfg.segments():
+        c = registry.contract(kind)
+        if c.paged_kv and c.prefix_shareable:
+            classes.add(c.table_class)
+    return classes.pop() if len(classes) == 1 else None
 
 
 def paged_copy_block(cfg, state: DecodeState, src, dst) -> DecodeState:

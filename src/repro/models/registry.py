@@ -1,0 +1,154 @@
+"""Block-contract registry (DESIGN.md §16).
+
+Every block kind registers a :class:`BlockContract` — its serving contract
+*as data*: where its decode state lives (shared paged pool vs dense
+per-slot vs nothing), which block-table class its pool reads and whether
+that table is a recycling ring, whether its cached content is stable
+enough to prefix-share, and whether it routes experts.  Consumers
+(``models/lm.py``'s spec/step/prefill builders, the serve scheduler's
+admission and prefix-eligibility gates, the paged split/merge plumbing)
+read these declarations instead of switching on kind strings, so adding a
+block kind — or a whole serving workload built from one — means writing
+one module and registering it; no consumer changes.
+
+The registry is deliberately tiny and import-free (no jax, no blocks):
+``blocks.py`` registers the nine built-in kinds at import, satellite
+modules (e.g. :mod:`repro.models.bcnn`) register theirs, and tests may
+register throwaway kinds under :func:`temporary`.
+
+Contract semantics:
+
+``paged_kv``
+    The kind's decode state includes a shared :class:`PagedKVCache` pool
+    (no batch axis; addressed through per-slot block tables).  Implies
+    ``table_class`` is set.
+``per_slot_state``
+    The kind's decode state includes dense per-slot leaves (recurrent
+    carries, cross-attn ``ctx_kv``) that ride the batch axis and are
+    sliced/frozen per slot.  Both flags may be set (Whisper's decoder
+    block: self-attn pool + ctx_kv), or neither (a stateless block).
+``table_class``
+    Name of the block-table class the pool is addressed through
+    (``"full"`` monotone, ``"win"`` ring today; a new kind may name a new
+    class and every consumer sizes/allocates it generically).
+``window``
+    The table is a sliding-window *ring*: physical blocks recycle in
+    place, capacity is ``window + chunk - 1`` tokens, and contents are
+    never stable (which is why a windowed kind cannot be prefix-shared).
+``prefix_shareable``
+    The kind's cached blocks fully encode its sequential state, so a
+    prefix skipped at prefill can be rebuilt by mapping cached blocks.
+    **Fail-closed**: the default is False, and the serve engine only
+    enables prefix caching when every decoder kind declares True — a kind
+    that says nothing is ineligible.
+``decodes``
+    The kind participates in the autoregressive decode path (False for
+    encoder-only kinds, which only ever run inside ``lm.encode``).
+``routed_experts``
+    The kind's FFN routes tokens to ``cfg.top_k`` of ``cfg.n_experts``
+    experts (active-parameter accounting discounts the unrouted ones).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockContract:
+    """A block kind's declared serving contract (see module docstring)."""
+
+    kind: str
+    paged_kv: bool = False
+    per_slot_state: bool = False
+    table_class: str | None = None
+    window: bool = False
+    prefix_shareable: bool = False
+    decodes: bool = True
+    routed_experts: bool = False
+
+    def __post_init__(self):
+        if not self.kind:
+            raise ValueError("contract needs a non-empty kind name")
+        if self.paged_kv and self.table_class is None:
+            raise ValueError(
+                f"kind {self.kind!r}: a paged-pool state needs a "
+                f"table_class to address the pool through")
+        if self.window and self.table_class is None:
+            raise ValueError(
+                f"kind {self.kind!r}: window ring semantics describe a "
+                f"block table; declare its table_class")
+        if self.window and self.prefix_shareable:
+            raise ValueError(
+                f"kind {self.kind!r}: a window ring recycles physical "
+                f"blocks in place — its contents are never stable enough "
+                f"to prefix-share (DESIGN.md §15)")
+
+
+_KINDS: dict[str, type] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: register a block component under its contract's
+    kind name.  The class must carry a ``contract: BlockContract`` and the
+    block surface (``defs/fwd/decode/chunk/state_spec/...`` — the
+    conformance suite in ``tests/test_registry.py`` pins the full list for
+    every registered kind).  Re-registering a kind is an error; use
+    :func:`temporary` for test doubles."""
+    contract = getattr(cls, "contract", None)
+    if not isinstance(contract, BlockContract):
+        raise TypeError(
+            f"{cls.__name__} must declare a BlockContract as `contract`")
+    if contract.kind in _KINDS:
+        raise ValueError(f"block kind {contract.kind!r} already registered "
+                         f"by {_KINDS[contract.kind].__name__}")
+    for attr in ("defs", "fwd", "state_spec"):
+        if not callable(getattr(cls, attr, None)):
+            raise TypeError(f"{cls.__name__} ({contract.kind!r}) lacks "
+                            f"required block method {attr}()")
+    _KINDS[contract.kind] = cls
+    return cls
+
+
+def unregister(kind: str) -> None:
+    _KINDS.pop(kind, None)
+
+
+@contextlib.contextmanager
+def temporary(cls: type) -> Iterator[type]:
+    """Register ``cls`` for the duration of a with-block (tests)."""
+    register(cls)
+    try:
+        yield cls
+    finally:
+        unregister(cls.contract.kind)
+
+
+def get(kind: str) -> type:
+    try:
+        return _KINDS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown block kind {kind!r} — registered: "
+            f"{sorted(_KINDS)} (import the module that registers it)"
+        ) from None
+
+
+def contract(kind: str) -> BlockContract:
+    return get(kind).contract
+
+
+def kinds() -> list[str]:
+    """Registered kind names, sorted (stable test parameterization)."""
+    return sorted(_KINDS)
+
+
+def items() -> list[tuple[str, Any]]:
+    return sorted(_KINDS.items())
+
+
+def view() -> dict[str, Any]:
+    """The live kind->class table (mutate via register/unregister only)."""
+    return _KINDS

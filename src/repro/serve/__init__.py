@@ -1,19 +1,25 @@
-"""Continuous-batching XNOR serve engine (DESIGN.md §13–§15).
+"""Continuous-batching XNOR serve engine (DESIGN.md §13–§16).
 
 Public surface:
   Request / Session / synthetic_trace — the request model,
+  TranscriptStream / synthetic_audio_trace — streaming-audio inputs,
   SlotPool / BlockPool                — pure scheduling bookkeeping (slots,
                                         refcounted paged-KV block allocation),
   PrefixIndex                         — content-addressed prefix cache index,
   ServeEngine / ServeReport           — the engine itself,
+  TranscriptionService / ClassifierService — workload drivers over the
+                                        unchanged engine core (§16),
   EngineStats                         — counters incl. block occupancy and
                                         prefix-cache hit rate.
 """
 
 from repro.serve.scheduler import (BlockPool, EngineStats, PrefixIndex,
                                    ServeEngine, ServeReport, SlotPool)
-from repro.serve.session import Request, Session, synthetic_trace
+from repro.serve.session import (Request, Session, TranscriptStream,
+                                 synthetic_audio_trace, synthetic_trace)
+from repro.serve.workloads import ClassifierService, TranscriptionService
 
-__all__ = ["BlockPool", "EngineStats", "PrefixIndex", "Request",
-           "ServeEngine", "ServeReport", "Session", "SlotPool",
-           "synthetic_trace"]
+__all__ = ["BlockPool", "ClassifierService", "EngineStats", "PrefixIndex",
+           "Request", "ServeEngine", "ServeReport", "Session", "SlotPool",
+           "TranscriptStream", "TranscriptionService",
+           "synthetic_audio_trace", "synthetic_trace"]

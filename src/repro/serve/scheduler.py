@@ -682,10 +682,14 @@ class ServeEngine:
             self.stats.blocks_total = n_blocks - 1 if self.blocks else 0
             # prefix caching (DESIGN.md §15): only for archs whose whole
             # sequential state is reconstructible from the paged pools —
-            # prefix_cache_eligible excludes recurrent carries and local
-            # window *rings* (recycled in place, contents never stable)
+            # prefix_cache_eligible is fail-closed over each kind's
+            # declared prefix_shareable contract flag (recurrent carries
+            # and local window *rings* don't declare it).  The table class
+            # shared prefixes register under comes from the same contracts.
+            self._share_cls = lm.prefix_table_class(cfg)
             self._prefix = (PrefixIndex(self.block_size)
                             if prefix_cache and self.blocks is not None
+                            and self._share_cls is not None
                             and lm.prefix_cache_eligible(cfg) else None)
             # host-owned block tables, mirrored to device on change
             self._tables = {c: np.zeros((slots, w), np.int32)
@@ -703,6 +707,7 @@ class ServeEngine:
                                                per_slot_pos=True)
             self._dense_prefill_lens: set[int] = set()
             self._prefix = None
+            self._share_cls = None
         # host-side mirrors of the device batch (tiny, moved every step)
         self._tokens = np.zeros((slots, 1), np.int32)
         self._active = np.zeros((slots,), bool)
@@ -820,7 +825,7 @@ class ServeEngine:
         if len(session.tokens) > 1:
             seq = np.concatenate(
                 [seq, np.asarray(session.tokens[:-1], np.int32)])
-        row = self._tables["full"][slot]
+        row = self._tables[self._share_cls][slot]
         chain = self._prefix.chain(seq[:written], req.ctx)
         for i, (key, parent, toks) in enumerate(chain):
             bid = int(row[i])
@@ -902,7 +907,7 @@ class ServeEngine:
         per = self._blocks_per_class(req.prompt.shape[0], req.max_new_tokens)
         if shared:
             per = dict(per)
-            per["full"] -= len(shared) - (1 if cow is not None else 0)
+            per[self._share_cls] -= len(shared) - (1 if cow is not None else 0)
         return per
 
     def _alloc_blocks(self, rid: int, n: int) -> list[int]:
@@ -989,7 +994,7 @@ class ServeEngine:
                 for cls_name, ids in fresh.items():
                     row = self._tables[cls_name][slot]
                     row[:] = 0
-                    if cls_name == "full" and shared:
+                    if cls_name == self._share_cls and shared:
                         row[:len(shared)] = shared
                         tail = ids
                         if cow_src is not None:
@@ -1005,7 +1010,7 @@ class ServeEngine:
                 if cow_src is not None:
                     self._state = self._cow_program(
                         self._state, jnp.int32(cow_src),
-                        jnp.int32(fresh["full"][0]))
+                        jnp.int32(fresh[self._share_cls][0]))
                     self.blocks.drop(req.rid, cow_src)
                     self.stats.cow_copies += 1
                 self.stats.fresh_blocks += sum(len(v) for v in fresh.values())
@@ -1038,7 +1043,7 @@ class ServeEngine:
         this is what lets a request share with a *still-prefilling* donor
         (the mid-prefill divergence case).  Already-registered keys (the
         blocks this request itself shares) no-op via keep-first."""
-        row = self._tables["full"][slot]
+        row = self._tables[self._share_cls][slot]
         n = min(n_done, len(prog.chain))
         while prog.registered < n:
             key, parent, toks = prog.chain[prog.registered]

@@ -1,0 +1,145 @@
+"""Serving workloads over the unchanged engine core (DESIGN.md §16).
+
+Pins the two §16 workload drivers:
+
+* :class:`TranscriptionService` — transcripts are schedule-independent
+  (any slot count yields the same tokens, the §13 (rid, step) seed-folding
+  guarantee lifted to chained sessions), incremental (each window's prompt
+  carries the transcript tail), and fully drain the engine.
+* :class:`ClassifierService` — the paper's Fig. 6 classification workload:
+  accuracy through the serve path, packed-XNOR == float-sign predictions,
+  and one-shot (``max_new_tokens=1``) slot turnover with more images than
+  slots.
+"""
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import bcnn, lm
+from repro.serve import (ClassifierService, TranscriptStream,
+                         TranscriptionService, synthetic_audio_trace)
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    cfg = configs.get("whisper-tiny").smoke(dtype=jnp.float32)
+    key = jax.random.PRNGKey(zlib.crc32(b"whisper-tiny") % 2**31)
+    return cfg, lm.init_params(cfg, key)
+
+
+@pytest.fixture(scope="module")
+def classifier():
+    """One trained service shared by the classifier tests (training is the
+    expensive part; the tests exercise serving)."""
+    return ClassifierService(slots=3, train_steps=150, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# streaming transcription
+# ---------------------------------------------------------------------------
+
+
+def test_transcription_schedule_independent(whisper):
+    """slots=1 (fully serial) and slots=3 (streams interleaved) emit
+    bit-identical transcripts — scheduling never leaks into sampling."""
+    cfg, params = whisper
+    streams = synthetic_audio_trace(3, 2, n_ctx_tokens=cfg.n_ctx_tokens,
+                                    d_model=cfg.d_model, seed=5)
+    outs = [TranscriptionService(cfg, params, slots=s, seed=7)
+            .transcribe(streams) for s in (1, 3)]
+    assert outs[0] == outs[1]
+    assert sorted(outs[0]) == [0, 1, 2]
+    # every window contributed its full budget (eos is disabled)
+    assert all(len(t) == 2 * 4 for t in outs[0].values())
+
+
+def test_transcription_is_incremental(whisper):
+    """Window prompts carry the transcript tail (bounded by ``carry``),
+    and the engine sees exactly one prefill per window."""
+    cfg, params = whisper
+    svc = TranscriptionService(cfg, params, slots=2, tokens_per_window=3,
+                               carry=4, seed=1)
+    assert svc._prompt([]).tolist() == [svc.bos_id]
+    assert svc._prompt([5, 6]).tolist() == [svc.bos_id, 5, 6]
+    assert svc._prompt(list(range(10))).tolist() == [svc.bos_id, 6, 7, 8, 9]
+    streams = synthetic_audio_trace(2, 3, n_ctx_tokens=cfg.n_ctx_tokens,
+                                    d_model=cfg.d_model, seed=2)
+    out = svc.transcribe(streams)
+    assert all(len(t) == 3 * 3 for t in out.values())
+    assert svc.stats.prefills == 2 * 3
+    # a second transcribe() call starts from a fresh engine + rid space
+    assert svc.transcribe(streams) == out
+
+
+def test_transcription_validation(whisper):
+    cfg, params = whisper
+    with pytest.raises(ValueError, match="enc-dec"):
+        TranscriptionService(configs.get("qwen3-4b").smoke(), params)
+    with pytest.raises(ValueError, match="s_max"):
+        TranscriptionService(cfg, params, carry=30, tokens_per_window=8,
+                             s_max=32)
+    svc = TranscriptionService(cfg, params, slots=2)
+    w = np.zeros((cfg.n_ctx_tokens, cfg.d_model), np.float32)
+    dup = [TranscriptStream(sid=1, windows=[w]),
+           TranscriptStream(sid=1, windows=[w])]
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.transcribe(dup)
+    with pytest.raises(ValueError, match="no windows"):
+        TranscriptStream(sid=0, windows=[])
+
+
+# ---------------------------------------------------------------------------
+# XNOR-CNN classification
+# ---------------------------------------------------------------------------
+
+
+def test_classifier_accuracy_through_engine(classifier):
+    """Serve-path predictions hit the example's accuracy on held-out
+    images, and every emitted token is a class id (training suppressed the
+    query/spare vocab entries)."""
+    assert classifier.train_acc >= 0.95
+    imgs, y = bcnn.synthetic_images(jax.random.PRNGKey(99), 32)
+    pred = classifier.classify(np.asarray(imgs))
+    assert pred.shape == (32,)
+    assert set(np.unique(pred)) <= {0, 1}
+    assert float(np.mean(pred == np.asarray(y))) >= 0.9
+
+
+def test_classifier_packed_matches_float(classifier):
+    """pack=True (resident packed bit-planes, popcount GEMM) and
+    pack=False (float sign weights) classify identically."""
+    imgs, _ = bcnn.synthetic_images(jax.random.PRNGKey(7), 16)
+    packed = classifier.classify(np.asarray(imgs))
+    float_svc = ClassifierService(cfg=classifier.cfg,
+                                  params=classifier.params,
+                                  slots=3, pack=False)
+    np.testing.assert_array_equal(float_svc.classify(np.asarray(imgs)),
+                                  packed)
+
+
+def test_classifier_one_shot_sessions(classifier):
+    """More images than slots: every request is a one-shot session that
+    finishes at its prefill sample, so slots turn over and the whole batch
+    drains without decode budget."""
+    before = classifier.stats.prefills
+    imgs, _ = bcnn.synthetic_images(jax.random.PRNGKey(11), 10)
+    pred = classifier.classify(np.asarray(imgs))
+    assert pred.shape == (10,)
+    assert classifier.stats.prefills == before + 10
+    sessions = list(classifier.engine.sessions.values())[-10:]
+    assert all(s.finish_reason == "length" and len(s.tokens) == 1
+               for s in sessions)
+    # persistent engine: a repeat batch reuses slots under fresh rids and
+    # stays deterministic (temperature is pinned to 0)
+    np.testing.assert_array_equal(classifier.classify(np.asarray(imgs)),
+                                  pred)
+
+
+def test_classifier_rejects_wrong_geometry(classifier):
+    with pytest.raises(ValueError, match="pixels"):
+        classifier.classify(np.zeros((2, 8, 8), np.float32))
