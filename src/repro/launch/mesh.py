@@ -52,6 +52,29 @@ def make_engine_mesh(n_devices: int | None = None):
     return Mesh(np.asarray(devs[:n]), ("bank",))
 
 
+def make_replica_meshes(n_replicas: int):
+    """Partition the host's devices into one 1-D ``bank`` sub-mesh per
+    serve replica (DESIGN.md §17).
+
+    With at least one device per replica each sub-mesh gets a disjoint
+    contiguous slice of ``len(devices) // n_replicas`` devices (the
+    remainder stays unused — equal-width replicas keep the straggler
+    policy's per-step timing comparable); with fewer devices than replicas
+    the sub-meshes wrap round-robin and replicas share.  The router pins
+    each replica's programs to its sub-mesh's first device, so under the
+    8-virtual-device CI mode replicas genuinely run side by side.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"need at least one replica, got {n_replicas}")
+    devs = jax.devices()
+    if len(devs) >= n_replicas:
+        per = len(devs) // n_replicas
+        slices = [devs[i * per:(i + 1) * per] for i in range(n_replicas)]
+    else:
+        slices = [[devs[i % len(devs)]] for i in range(n_replicas)]
+    return [Mesh(np.asarray(s), ("bank",)) for s in slices]
+
+
 def make_smoke_mesh(n_devices: int | None = None):
     """Tiny mesh for CPU-scale distributed tests (e.g. 8 = 2x2x2)."""
     n = n_devices or len(jax.devices())

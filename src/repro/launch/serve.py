@@ -93,6 +93,55 @@ def _run_classify(cfg, args) -> int:
     return 0
 
 
+def _run_replicated(cfg, params, trace, s_max, args) -> int:
+    """The replicated tier (DESIGN.md §17): N engine replicas behind the
+    least-loaded router, optional kill-a-replica drill mid-run, encrypted
+    migration checkpoints, background integrity scrubbing."""
+    import contextlib
+    import tempfile
+
+    from repro.serve import Router
+
+    if args.dense:
+        raise SystemExit("--replicas > 1 needs the paged layout "
+                         "(drop --dense): migration extracts state "
+                         "through per-slot block tables")
+    with contextlib.ExitStack() as stack:
+        ckpt_dir = args.ckpt_dir or stack.enter_context(
+            tempfile.TemporaryDirectory(prefix="serve_mig_"))
+        router = Router(cfg, params, args.replicas, slots=args.slots,
+                        s_max=s_max, ckpt_dir=ckpt_dir,
+                        epoch_steps=args.epoch_steps, eos_id=args.eos_id,
+                        temperature=args.temperature, seed=args.seed,
+                        pack=not args.no_pack, block_size=args.block_size,
+                        prefill_chunk=args.prefill_chunk,
+                        n_blocks=args.n_blocks,
+                        prefix_cache=not args.no_prefix_cache)
+        for r in trace:
+            router.submit(r)
+        rep = router.run(kill_at=args.kill_at or None)
+    sr = rep.serve_report()
+    lat = sr.latency_quantiles((0.5, 0.95))
+    ttft = sr.ttft_quantiles((0.5, 0.95))
+    print(f"arch={cfg.name} replicas={args.replicas} "
+          f"slots={args.slots}/replica requests={len(trace)} "
+          f"kill_at={args.kill_at or '—'}")
+    print(f"  generated {rep.generated} tokens in {rep.wall:.2f}s "
+          f"-> {rep.tok_per_s:.1f} tok/s across replicas")
+    print(f"  latency p50={lat[0.5]*1e3:.0f}ms p95={lat[0.95]*1e3:.0f}ms; "
+          f"ttft p50={ttft[0.5]*1e3:.0f}ms p95={ttft[0.95]*1e3:.0f}ms")
+    print(f"  migrations: {len(rep.migrations)} "
+          f"(killed {rep.killed or 'none'}); "
+          f"stragglers observed: {len(rep.straggler_events)}")
+    print(f"  scrubber: {rep.scrub_passes} passes, "
+          f"{sum(r.scrub_weight_leaves for r in rep.replicas)} weight "
+          f"leaves + {sum(r.scrub_idle_blocks for r in rep.replicas)} idle "
+          f"blocks verified, {rep.scrub_corruptions} corruptions")
+    done = sum(1 for s in rep.sessions.values() if s.done)
+    print(f"  completed {done}/{len(trace)}")
+    return 0 if done == len(trace) and rep.scrub_corruptions == 0 else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -127,6 +176,18 @@ def main() -> int:
     ap.add_argument("--prefix-frac", type=float, default=0.9,
                     help="fraction of requests opening with the shared "
                          "prefix (with --prefix-len)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve replicas (>1: the replicated tier with "
+                         "least-loaded routing and live migration, §17)")
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="router step of the kill-a-replica drill "
+                         "(0: no drill; needs --replicas > 1)")
+    ap.add_argument("--epoch-steps", type=int, default=8,
+                    help="integrity-scrubber cadence in router steps "
+                         "(0: off; --replicas > 1)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="migration checkpoint directory (default: a "
+                         "temp dir; --replicas > 1)")
     ap.add_argument("--workload", choices=("lm", "transcribe", "classify"),
                     default="lm",
                     help="what to serve: chat trace, streaming "
@@ -181,6 +242,9 @@ def main() -> int:
         print(f"arch={cfg.name} static generate {out.shape} in {dt:.2f}s "
               f"({args.slots * nt / dt:.1f} tok/s)")
         return 0
+
+    if args.replicas > 1:
+        return _run_replicated(cfg, params, trace, s_max, args)
 
     eng = ServeEngine(cfg, params, slots=args.slots, s_max=s_max,
                       eos_id=args.eos_id, temperature=args.temperature,

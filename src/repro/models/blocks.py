@@ -180,6 +180,51 @@ class PagedLayout:
             return shared
         return per_slot
 
+    # -- slot extraction / injection (DESIGN.md §17: session migration) ------
+
+    @classmethod
+    def export_slot(cls, state, slot, ids):
+        """Lift one slot's complete state out of the stacked paged layout.
+
+        ``state`` is the segment-stacked paged state (pool leaves
+        ``(n, n_blocks, ...)``, per-slot leaves ``(n, batch, ...)``);
+        ``slot`` is a device scalar; ``ids`` is this kind's full (W,)
+        block-table row (physical block ids; unused entries point at the
+        trash block 0, whose gathered garbage is carried along and never
+        read).  Returns ``(shared, per_slot)`` payloads — pool blocks in
+        table-row order (which is exactly what preserves position->block
+        addressing on re-import, including window *rings*, whose
+        ``(pos // bs) % W`` mapping is a function of row order alone) and
+        the slot's dense leaves at batch width 1.  Contract-generic: no
+        kind overrides this."""
+        shared, per_slot = cls.paged_split(state)
+        sh = None if shared is None else jax.tree.map(
+            lambda l: jnp.take(l, ids, axis=1), shared)
+        ps = None if per_slot is None else jax.tree.map(
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+            per_slot)
+        return (sh, ps)
+
+    @classmethod
+    def import_slot(cls, state, slot, ids, payload):
+        """Inverse of :meth:`export_slot`: scatter a payload into ``slot``
+        and the blocks named by ``ids`` (the *destination* table row — same
+        width, freshly allocated ids).  Unused row entries are 0, so the
+        payload's trash-gathered garbage lands back in the trash block —
+        harmless by the §14 never-read invariant."""
+        sh_p, ps_p = payload
+        shared, per_slot = cls.paged_split(state)
+        if shared is not None:
+            shared = jax.tree.map(
+                lambda l, q: l.at[:, ids].set(q.astype(l.dtype)),
+                shared, sh_p)
+        if per_slot is not None:
+            per_slot = jax.tree.map(
+                lambda l, q: jax.lax.dynamic_update_slice_in_dim(
+                    l, q.astype(l.dtype), slot, axis=1),
+                per_slot, ps_p)
+        return cls.paged_merge(shared, per_slot)
+
 
 @register
 class AttnBlock(PagedLayout):
@@ -926,6 +971,51 @@ def segment_copy_block(cfg, states: list, src, dst):
             shared = shared.copy_block(src, dst)
         out.append(block.paged_merge(shared, per_slot))
     return out
+
+
+def segment_export_slot(cfg, states: list, slot, ids: dict):
+    """Extract one slot's state from every segment (DESIGN.md §17).
+
+    ``ids`` maps table class -> this slot's full (W,) block-table row;
+    each kind resolves its row through its contract's ``table_class`` —
+    the same dispatch :func:`_block_table` uses on the forward path, so
+    a kind can never be exported through the wrong table.  Returns a
+    tuple of per-segment ``(shared, per_slot)`` payloads.
+    """
+    out = []
+    for (kind, _), st in zip(cfg.segments(), states):
+        block = registry.get(kind)
+        c = block.contract
+        row = ids[c.table_class] if c.paged_kv else None
+        out.append(block.export_slot(st, slot, row))
+    return tuple(out)
+
+
+def segment_import_slot(cfg, states: list, slot, ids: dict, payloads):
+    """Inverse of :func:`segment_export_slot`: scatter per-segment payloads
+    into ``slot`` and the destination table rows ``ids``."""
+    out = []
+    for (kind, _), st, pl in zip(cfg.segments(), states, payloads):
+        block = registry.get(kind)
+        c = block.contract
+        row = ids[c.table_class] if c.paged_kv else None
+        out.append(block.import_slot(st, slot, row, pl))
+    return out
+
+
+def segment_gather_block(cfg, states: list, bid):
+    """Read physical block ``bid`` out of every shared pool leaf (the
+    integrity scrubber's view of an idle cached block, DESIGN.md §17).
+    Returns a per-segment tuple of shared-pool slices (None for segments
+    with no paged pool); per-slot state is never block-granular and is
+    not part of a block's identity."""
+    out = []
+    for (kind, _), st in zip(cfg.segments(), states):
+        block = registry.get(kind)
+        shared, _ = block.paged_split(st)
+        out.append(None if shared is None
+                   else jax.tree.map(lambda l: l[:, bid], shared))
+    return tuple(out)
 
 
 def segment_states(cfg, segments, batch, s_max, abstract: bool):

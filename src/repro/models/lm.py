@@ -396,3 +396,61 @@ def paged_copy_block(cfg, state: DecodeState, src, dst) -> DecodeState:
     engine jits this once per engine and calls it for any pair."""
     seg = blocks.segment_copy_block(cfg, list(state.seg_states), src, dst)
     return DecodeState(state.pos, tuple(seg), state.ctx)
+
+
+# ---------------------------------------------------------------------------
+# session migration: slot extraction / injection (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+
+def export_slot(cfg, state: DecodeState, slot, ids: dict):
+    """One slot's complete sequential state as a self-contained tree.
+
+    ``ids`` maps table class -> the slot's full (W,) block-table row (host
+    tables are device data here).  The payload is ``{"pos": (1,) int32,
+    "segs": per-segment (shared, per_slot) pairs}`` — paged KV blocks in
+    table-row order plus dense per-slot carries at batch width 1.  Pure
+    gather: jitted once per engine, the exporting slot is untouched.
+    Defined for the paged layout only (``paged_decode_state_spec``); the
+    dense layout classifies whole KV caches as shared pools, which this
+    row-gather addressing cannot represent.
+    """
+    pos = jax.lax.dynamic_slice_in_dim(state.pos, slot, 1, axis=0)
+    segs = blocks.segment_export_slot(cfg, list(state.seg_states), slot, ids)
+    return {"pos": pos, "segs": segs}
+
+
+def import_slot(cfg, state: DecodeState, slot, ids: dict,
+                payload) -> DecodeState:
+    """Inverse of :func:`export_slot`: seat a payload into resident slot
+    ``slot`` with ``ids`` the *destination* table rows (same widths,
+    freshly allocated block ids).  Re-import is content-faithful even when
+    the source blocks were shared/COW prefix blocks — blocks travel by
+    value, so the destination holds a private content-identical copy and
+    re-registers with its own prefix index."""
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        state.pos, payload["pos"].astype(jnp.int32), slot, axis=0)
+    seg = blocks.segment_import_slot(cfg, list(state.seg_states), slot, ids,
+                                     payload["segs"])
+    return DecodeState(pos, tuple(seg), state.ctx)
+
+
+def export_slot_spec(cfg, state_like, slot_ids_widths: dict):
+    """Shape/dtype tree of :func:`export_slot`'s payload for this engine
+    geometry — the ``like`` tree a migration checkpoint restores against
+    (:func:`repro.checkpoint.ckpt.restore` needs exact shapes/dtypes to
+    address and decrypt leaves).  ``state_like`` is the engine's resident
+    state (or its abstract spec); ``slot_ids_widths`` maps table class ->
+    table width W."""
+    ids = {c: jax.ShapeDtypeStruct((w,), jnp.int32)
+           for c, w in slot_ids_widths.items()}
+    return jax.eval_shape(
+        lambda st, rows: export_slot(cfg, st, jnp.int32(0), rows),
+        state_like, ids)
+
+
+def gather_block(cfg, state: DecodeState, bid):
+    """Physical block ``bid``'s contents across every shared pool — the
+    integrity scrubber's unit of verification for idle cached blocks
+    (DESIGN.md §17)."""
+    return blocks.segment_gather_block(cfg, list(state.seg_states), bid)

@@ -5,7 +5,7 @@ Every block kind registers a :class:`BlockContract` — its serving contract
 per-slot vs nothing), which block-table class its pool reads and whether
 that table is a recycling ring, whether its cached content is stable
 enough to prefix-share, and whether it routes experts.  Consumers
-(``models/lm.py``'s spec/step/prefill builders, the serve scheduler's
+(``models/lm.py``'s spec/step/prefill builders, the serve engine's
 admission and prefix-eligibility gates, the paged split/merge plumbing)
 read these declarations instead of switching on kind strings, so adding a
 block kind — or a whole serving workload built from one — means writing

@@ -1,25 +1,31 @@
-"""Continuous-batching XNOR serve engine (DESIGN.md §13–§16).
+"""Continuous-batching XNOR serve engine (DESIGN.md §13–§17).
 
-Public surface:
-  Request / Session / synthetic_trace — the request model,
-  TranscriptStream / synthetic_audio_trace — streaming-audio inputs,
-  SlotPool / BlockPool                — pure scheduling bookkeeping (slots,
-                                        refcounted paged-KV block allocation),
-  PrefixIndex                         — content-addressed prefix cache index,
-  ServeEngine / ServeReport           — the engine itself,
-  TranscriptionService / ClassifierService — workload drivers over the
-                                        unchanged engine core (§16),
-  EngineStats                         — counters incl. block occupancy and
-                                        prefix-cache hit rate.
+Module map (the replica-ready split, §17):
+  session.py   — Request / Session / synthetic traces (the request model),
+  pools.py     — SlotPool / BlockPool: pure scheduling bookkeeping (slots,
+                 refcounted paged-KV block allocation, idle LRU tier),
+  prefix.py    — PrefixIndex: content-addressed prefix cache index,
+  stats.py     — EngineStats / ServeReport: counters and run reports,
+  engine.py    — ServeEngine + its jitted programs (prefill / chunked
+                 prefill / decode / insert / COW) and session export/import,
+  router.py    — Router: N engine replicas, least-loaded admission, live
+                 session migration, kill-drill draining, integrity scrubber,
+  workloads.py — TranscriptionService / ClassifierService drivers (§16).
+
+Everything below re-exports from those modules; importing from
+``repro.serve`` is the stable surface and survives internal splits.
 """
 
-from repro.serve.scheduler import (BlockPool, EngineStats, PrefixIndex,
-                                   ServeEngine, ServeReport, SlotPool)
+from repro.serve.engine import ServeEngine
+from repro.serve.pools import BlockPool, SlotPool
+from repro.serve.prefix import PrefixIndex
+from repro.serve.router import Router, RouterReport
 from repro.serve.session import (Request, Session, TranscriptStream,
                                  synthetic_audio_trace, synthetic_trace)
+from repro.serve.stats import EngineStats, ServeReport
 from repro.serve.workloads import ClassifierService, TranscriptionService
 
 __all__ = ["BlockPool", "ClassifierService", "EngineStats", "PrefixIndex",
-           "Request", "ServeEngine", "ServeReport", "Session", "SlotPool",
-           "TranscriptStream", "TranscriptionService",
+           "Request", "Router", "RouterReport", "ServeEngine", "ServeReport",
+           "Session", "SlotPool", "TranscriptStream", "TranscriptionService",
            "synthetic_audio_trace", "synthetic_trace"]

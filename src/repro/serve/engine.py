@@ -8,10 +8,10 @@ on top of the token-level serve path.  This module provides it:
   :class:`repro.models.lm.DecodeState` (per-slot position vector);
 * a **block-paged KV cache** (default, DESIGN.md §14): attention state
   lives in a shared block pool addressed through host-owned per-slot block
-  tables (:class:`BlockPool` allocates; tables are device *data*), so cache
-  memory is proportional to tokens actually held, not ``slots x s_max``;
-  ``paged=False`` keeps the slot-dense layout — the two are
-  token-identical (MoE excepted, see §14);
+  tables (:class:`repro.serve.pools.BlockPool` allocates; tables are device
+  *data*), so cache memory is proportional to tokens actually held, not
+  ``slots x s_max``; ``paged=False`` keeps the slot-dense layout — the two
+  are token-identical (MoE excepted, see §14);
 * **admission**: a freed slot is immediately refilled.  Paged: the
   request's worst-case blocks are reserved (OOM backpressure holds the
   FIFO head otherwise) and the prompt is consumed by **chunked prefill** —
@@ -25,26 +25,32 @@ on top of the token-level serve path.  This module provides it:
   trash block);
 * **one jitted decode program** for the whole run: position vector, active
   mask, block tables, sampling seeds are device *data*, never trace
-  constants, so slots joining/leaving and blocks moving never retrace.
+  constants, so slots joining/leaving and blocks moving never retrace;
+* **session export/import** (DESIGN.md §17): a live slot's complete state —
+  paged KV blocks gathered through its table rows, per-slot recurrent /
+  window carries, position, generated tokens, chunked-prefill progress —
+  lifts out as a flat array tree plus host metadata and re-admits into any
+  engine with the same (cfg, geometry), token-identically under the
+  schedule-independent (rid, step) seed-folding contract.  The replicated
+  tier (:mod:`repro.serve.router`) moves it between replicas as an
+  encrypted delta checkpoint.
 
 With ``pack=True`` (default) and a ``quant="xnor"`` arch the resident
 params are the packed form (:func:`repro.models.lm.pack_params`): binary
 filter planes + beta, float weights absent — packed-weight residency (runs
 on both cache layouts).
 
-Scheduling bookkeeping (:class:`SlotPool`, :class:`BlockPool`) is pure
-host logic, separated from the jitted programs so it is unit-testable
-without a model; :class:`EngineStats` counts steps, traces, and block-pool
-occupancy (peak/mean blocks in use) for the benchmarks.
+Scheduling bookkeeping lives in :mod:`repro.serve.pools` (pure host logic,
+unit-testable without a model), the content-addressed prefix index in
+:mod:`repro.serve.prefix`, and counters/reports in
+:mod:`repro.serve.stats`; this module owns the jitted programs and the
+engine loop that drives them.
 """
 
 from __future__ import annotations
 
-import bisect
-import collections
 import dataclasses
 import functools
-import hashlib
 import time
 from typing import Any
 
@@ -53,445 +59,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import lm
+from repro.serve.pools import BlockPool, SlotPool
+from repro.serve.prefix import PrefixIndex
 from repro.serve.session import Request, Session
-
-
-class SlotPool:
-    """Slot bookkeeping: FIFO admission into the lowest free slot.
-
-    Pure host-side state machine (no jax) — determinism of the whole engine
-    reduces to this class being deterministic, which the unit tests pin.
-    """
-
-    def __init__(self, n_slots: int):
-        if n_slots < 1:
-            raise ValueError(f"need at least one slot, got {n_slots}")
-        self.n_slots = n_slots
-        self._free = list(range(n_slots))        # kept sorted ascending
-        self._queue: collections.deque[Session] = collections.deque()
-        self._active: dict[int, Session] = {}
-
-    # -- queue side ----------------------------------------------------------
-
-    def submit(self, session: Session) -> None:
-        self._queue.append(session)
-
-    @property
-    def queued(self) -> int:
-        return len(self._queue)
-
-    def peek(self) -> Session | None:
-        """The session the next admit() would pop (FIFO head), or None."""
-        return self._queue[0] if self._queue else None
-
-    # -- slot side -----------------------------------------------------------
-
-    @property
-    def free_slots(self) -> list[int]:
-        return list(self._free)
-
-    @property
-    def active(self) -> dict[int, Session]:
-        return dict(self._active)
-
-    def admissible(self) -> bool:
-        return bool(self._queue) and bool(self._free)
-
-    def admit(self) -> tuple[Session, int]:
-        """Pop the oldest queued session into the lowest free slot."""
-        if not self._queue:
-            raise RuntimeError("admit() with an empty queue")
-        if not self._free:
-            raise RuntimeError("admit() with no free slot")
-        session = self._queue.popleft()
-        slot = self._free.pop(0)
-        session.slot = slot
-        self._active[slot] = session
-        return session, slot
-
-    def evict(self, slot: int) -> Session:
-        """Free a slot; its session leaves the active set."""
-        if slot not in self._active:
-            raise KeyError(f"slot {slot} is not active")
-        session = self._active.pop(slot)
-        self._free.append(slot)
-        self._free.sort()
-        return session
-
-    def idle(self) -> bool:
-        return not self._queue and not self._active
-
-
-class BlockPool:
-    """Host allocator for the shared paged-KV block pool (DESIGN.md §14/§15).
-
-    Physical block 0 is the reserved *trash* block — dead-slot and padding
-    writes are routed there and never read — so ids 1..n_blocks-1 are
-    allocatable.  Allocation is lowest-id-first and per-request (free by
-    request id reclaims everything the request held), which keeps the whole
-    engine deterministic for a fixed trace.  Pure host logic, like
-    :class:`SlotPool`, so it is unit-testable without a model.
-
-    Prefix sharing (§15) adds per-block refcounts: a block may be *held*
-    by several requests at once (:meth:`share` maps an existing block into
-    another request read-only; a block is writable only while exactly one
-    request holds it and it is not cached) and may be marked *cached*
-    (registered in a :class:`PrefixIndex`).  A cached block whose refcount
-    drops to zero is not freed but parked in an *idle* tier — content kept
-    resident, revived by a later :meth:`share`, reclaimed least-recently-
-    idle-first by :meth:`evict_idle` under pool pressure.  Uncached blocks
-    go straight back to the free list, exactly the pre-§15 behavior.  LRU
-    order uses a logical clock, never wall time, so eviction (and with it
-    the whole engine) stays deterministic for a fixed trace.
-    """
-
-    def __init__(self, n_blocks: int):
-        if n_blocks < 2:
-            raise ValueError(
-                f"need at least 2 blocks (block 0 is the reserved trash "
-                f"block), got {n_blocks}")
-        self.n_blocks = n_blocks
-        self._free = list(range(1, n_blocks))    # kept sorted ascending
-        self._held: dict[int, list[int]] = {}    # rid -> block ids
-        self._ref: dict[int, int] = {}           # bid -> holders (>= 1)
-        self._cached: set[int] = set()           # registered in a PrefixIndex
-        self._idle: dict[int, int] = {}          # cached, ref 0: bid -> stamp
-        self._clock = 0                          # deterministic LRU time
-
-    @property
-    def capacity(self) -> int:
-        """Allocatable blocks (excludes the trash block)."""
-        return self.n_blocks - 1
-
-    @property
-    def available(self) -> int:
-        """Immediately allocatable (free list only — idle cached blocks
-        need :meth:`evict_idle` first)."""
-        return len(self._free)
-
-    @property
-    def idle(self) -> int:
-        """Cached blocks with no holder (evictable, content resident)."""
-        return len(self._idle)
-
-    @property
-    def reclaimable(self) -> int:
-        """free + idle: the upper bound an admission gate may count on.
-        Idle blocks a plan itself will :meth:`share` must be excluded by
-        the caller — revival precedes the fresh allocation, so they
-        cannot also be evicted to cover it."""
-        return len(self._free) + len(self._idle)
-
-    @property
-    def in_use(self) -> int:
-        """Blocks held by at least one request (idle cached blocks are
-        resident but not in use)."""
-        return self.capacity - len(self._free) - len(self._idle)
-
-    @property
-    def free_blocks(self) -> list[int]:
-        return list(self._free)
-
-    @property
-    def idle_blocks(self) -> list[int]:
-        """Idle cached blocks, eviction (LRU) order."""
-        return sorted(self._idle, key=self._idle.__getitem__)
-
-    def refcount(self, bid: int) -> int:
-        return self._ref.get(bid, 0)
-
-    def cached(self, bid: int) -> bool:
-        return bid in self._cached
-
-    def is_idle(self, bid: int) -> bool:
-        """True when ``bid`` sits in the idle tier (cached, no holder) —
-        evictable now, but not after a :meth:`share` revives it."""
-        return bid in self._idle
-
-    def alloc(self, rid: int, n: int) -> list[int]:
-        """n lowest free block ids, charged to request ``rid``."""
-        if n < 0:
-            raise ValueError(f"alloc({n})")
-        if n > len(self._free):
-            raise RuntimeError(
-                f"block pool exhausted: request {rid} needs {n} blocks, "
-                f"{len(self._free)} free (admission must gate on available, "
-                f"evicting idle cached blocks first)")
-        ids = self._free[:n]
-        del self._free[:n]
-        self._held.setdefault(rid, []).extend(ids)
-        for bid in ids:
-            self._ref[bid] = 1
-        return ids
-
-    def share(self, rid: int, ids: list[int]) -> None:
-        """Map existing blocks into ``rid`` read-only (refcount + 1 each).
-
-        Sharing an idle cached block revives it: it leaves the eviction
-        tier with its contents intact.  Sharing a free block (or the trash
-        block, or a block ``rid`` already holds) is a caller bug."""
-        held = self._held.setdefault(rid, [])
-        for bid in ids:
-            if bid <= 0 or bid >= self.n_blocks:
-                raise ValueError(f"share({bid}): not an allocatable block id")
-            if bid in held:
-                raise RuntimeError(
-                    f"share({bid}): request {rid} already holds it")
-            if bid in self._idle:
-                del self._idle[bid]
-                self._ref[bid] = 1
-            elif self._ref.get(bid, 0) > 0:
-                self._ref[bid] += 1
-            else:
-                raise RuntimeError(f"share({bid}): block is free")
-            held.append(bid)
-
-    def _release(self, bid: int) -> None:
-        r = self._ref[bid] - 1
-        if r > 0:
-            self._ref[bid] = r
-            return
-        del self._ref[bid]
-        if bid in self._cached:
-            self._clock += 1
-            self._idle[bid] = self._clock
-        else:
-            bisect.insort(self._free, bid)
-
-    def free(self, rid: int) -> int:
-        """Drop every hold ``rid`` has; returns how many.  Blocks whose
-        refcount hits zero return to the free list, except cached ones,
-        which park in the idle tier."""
-        ids = self._held.pop(rid, [])
-        for bid in ids:
-            self._release(bid)
-        return len(ids)
-
-    def drop(self, rid: int, bid: int) -> None:
-        """Release ``rid``'s hold on one block — the copy-on-write path:
-        after duplicating a shared divergence block into a private one the
-        request lets go of the original."""
-        held = self._held.get(rid)
-        if held is None or bid not in held:
-            raise KeyError(f"drop({bid}): not held by request {rid}")
-        held.remove(bid)
-        if not held:
-            del self._held[rid]
-        self._release(bid)
-
-    def set_cached(self, bid: int) -> None:
-        """Mark a held block as index-registered: its last release parks
-        it in the idle tier instead of freeing it."""
-        if self._ref.get(bid, 0) < 1:
-            raise RuntimeError(f"set_cached({bid}): block is not held")
-        self._cached.add(bid)
-
-    def evict_idle(self, n: int) -> list[int]:
-        """Reclaim the ``n`` least-recently-idled cached blocks back to
-        the free list; the caller must drop their index entries.  Held
-        (refcount > 0) blocks are never evicted."""
-        if n > len(self._idle):
-            raise RuntimeError(
-                f"evict_idle({n}): only {len(self._idle)} blocks idle")
-        victims = sorted(self._idle, key=self._idle.__getitem__)[:n]
-        for bid in victims:
-            del self._idle[bid]
-            self._cached.discard(bid)
-            bisect.insort(self._free, bid)
-        return victims
-
-    def held(self, rid: int) -> list[int]:
-        return list(self._held.get(rid, []))
-
-
-class PrefixIndex:
-    """Content-addressed index over cached prefix blocks (DESIGN.md §15):
-    hash-of-block-contents -> physical block id, for *full* blocks only
-    (partial blocks are still being written, so their contents are not
-    stable).  Keys are chain hashes — a block's key folds its parent's
-    key, so key equality implies the whole prefix up to and including the
-    block matched (the same prefix-digest idea as ``CimEngine``'s streamed
-    digest path, but blake2b rather than the engine's linear XOR fold: an
-    index key must survive adversarial collisions, a parity check need
-    not).  Correctness never rests on the hash either way: every entry
-    stores its actual tokens and lookup verifies them word-exactly, so a
-    collision degrades to a cache miss, never to wrong reuse — the same
-    hash-then-word-compare discipline DigestCache uses (§12).
-
-    For ctx archs (vlm / enc-dec) the chain root folds a digest of the
-    request's modality context, so equal token prefixes under different
-    images / audio never share.  Pure host logic; the engine drives
-    registration and eviction, and :class:`BlockPool` owns residency."""
-
-    ROOT = b"\x00" * 16
-
-    def __init__(self, block_size: int):
-        if block_size < 1:
-            raise ValueError(f"block_size must be >= 1, got {block_size}")
-        self.block_size = block_size
-        # key -> (bid, tokens); parent key -> child keys; bid -> (key, parent)
-        self._entries: dict[bytes, tuple[int, np.ndarray]] = {}
-        self._children: dict[bytes, list[bytes]] = {}
-        self._by_block: dict[int, tuple[bytes, bytes]] = {}
-        # bumped on every mutation: lookup results are valid (and may be
-        # cached by callers) exactly while this stays unchanged
-        self.generation = 0
-
-    def __len__(self) -> int:
-        return len(self._by_block)
-
-    @staticmethod
-    def root_key(ctx=None) -> bytes:
-        if ctx is None:
-            return PrefixIndex.ROOT
-        a = np.ascontiguousarray(np.asarray(ctx))
-        return hashlib.blake2b(repr((a.shape, a.dtype.str)).encode()
-                               + a.tobytes(), digest_size=16).digest()
-
-    def chain(self, tokens, ctx=None) -> list[tuple[bytes, bytes, np.ndarray]]:
-        """(key, parent_key, block_tokens) per full block of ``tokens``."""
-        bs = self.block_size
-        toks = np.asarray(tokens, np.int32)
-        out, parent = [], self.root_key(ctx)
-        for i in range(len(toks) // bs):
-            blk = toks[i * bs:(i + 1) * bs]
-            key = hashlib.blake2b(parent + blk.tobytes(),
-                                  digest_size=16).digest()
-            out.append((key, parent, blk))
-            parent = key
-        return out
-
-    def register(self, key: bytes, parent: bytes, bid: int,
-                 tokens: np.ndarray) -> bool:
-        """Idempotent, keep-first: when two requests with identical
-        prompts prefill concurrently both try to register, and the first
-        stays canonical (the second's block simply frees unregistered).
-        Returns True when ``bid`` newly entered the index."""
-        if key in self._entries or bid in self._by_block:
-            return False
-        self._entries[key] = (bid, np.array(tokens, np.int32))
-        self._children.setdefault(parent, []).append(key)
-        self._by_block[bid] = (key, parent)
-        self.generation += 1
-        return True
-
-    def drop_block(self, bid: int) -> None:
-        """Remove the entry backed by ``bid`` (pool eviction).  Entries
-        that extended it stay registered: lookup can only reach a child
-        through its matched parent — which now misses — so orphaned
-        descendants are unreachable until a re-registration of the same
-        prefix content restores the chain, and meanwhile they age out of
-        the idle LRU like any other cold block."""
-        key, parent = self._by_block.pop(bid)
-        del self._entries[key]
-        sibs = self._children[parent]
-        sibs.remove(key)
-        if not sibs:
-            del self._children[parent]
-        self.generation += 1
-
-    def lookup(self, prompt, ctx=None):
-        """Longest registered chain of full blocks, plus the best partial
-        continuation.
-
-        Returns ``(block_ids, n_full, child)``: the matched full blocks'
-        ids, how many, and ``(bid, d)`` for the registered block extending
-        the chain with the longest common token prefix (``d`` tokens,
-        possibly 0; ties break toward the earliest-registered child) — or
-        None when no block extends the chain.  Tokens are compared exactly
-        at every step; a hash collision is a miss, never a wrong block."""
-        bs = self.block_size
-        toks = np.asarray(prompt, np.int32)
-        ids: list[int] = []
-        parent = self.root_key(ctx)
-        for key, _, blk in self.chain(toks, ctx):
-            ent = self._entries.get(key)
-            if ent is None or not np.array_equal(ent[1], blk):
-                break
-            ids.append(ent[0])
-            parent = key
-        n_full = len(ids)
-        child = None
-        rest = toks[n_full * bs:]
-        if len(rest):
-            best = -1
-            for ck in self._children.get(parent, []):
-                bid, ctoks = self._entries[ck]
-                m = min(len(rest), len(ctoks))
-                neq = ctoks[:m] != rest[:m]
-                d = int(np.argmax(neq)) if neq.any() else m
-                if d > best:
-                    best, child = d, (bid, d)
-        return ids, n_full, child
-
-
-@dataclasses.dataclass
-class EngineStats:
-    """Engine-side counters, including block-pool occupancy (peak / mean
-    blocks in use) so benchmarks can report memory utilization alongside
-    tok/s.  ``prefill_traces`` counts the distinct prefill programs this
-    engine demanded: actual compilations of the paged engine's per-engine
-    chunk program (pinned to exactly 1 for any mix of prompt lengths), vs
-    one per distinct prompt length on the dense path (whose module-level
-    jit cache may already hold some of them from an earlier engine in the
-    same process — the count is this engine's shape demand, not a process
-    compile count)."""
-
-    decode_steps: int = 0
-    prefills: int = 0
-    prefill_chunks: int = 0
-    prefill_traces: int = 0
-    decode_traces: int = 0
-    blocks_total: int = 0       # allocatable blocks (0: dense layout)
-    blocks_in_use: int = 0
-    blocks_peak: int = 0
-    # prefix caching (DESIGN.md §15; all zero when disabled / dense)
-    cow_copies: int = 0             # divergence-block copy-on-write copies
-    prefix_hits: int = 0            # admissions that mapped >= 1 shared block
-    prefix_shared_blocks: int = 0   # total blocks mapped read-only
-    prefix_tokens: int = 0          # prompt tokens skipped via the cache
-    prompt_tokens: int = 0          # prompt tokens admitted (paged path)
-    fresh_blocks: int = 0           # blocks newly allocated at admission
-    prefix_evictions: int = 0       # cached blocks reclaimed under pressure
-    prefix_cached_blocks: int = 0   # current index size (registered blocks)
-    _block_sum: int = 0
-    _block_samples: int = 0
-
-    def observe_blocks(self, in_use: int) -> None:
-        self.blocks_in_use = in_use
-        self.blocks_peak = max(self.blocks_peak, in_use)
-        self._block_sum += in_use
-        self._block_samples += 1
-
-    @property
-    def blocks_mean(self) -> float:
-        if not self._block_samples:
-            return 0.0
-        return self._block_sum / self._block_samples
-
-    @property
-    def block_utilization(self) -> float:
-        """Mean fraction of the pool in use (0 when dense)."""
-        if not self.blocks_total:
-            return 0.0
-        return self.blocks_mean / self.blocks_total
-
-    @property
-    def prefix_hit_rate(self) -> float:
-        """Fraction of admitted prompt tokens served from the prefix
-        cache (skipped at prefill)."""
-        if not self.prompt_tokens:
-            return 0.0
-        return self.prefix_tokens / self.prompt_tokens
-
-    @property
-    def blocks_per_request(self) -> float:
-        """Mean *fresh* blocks allocated per admitted request — sharing
-        drives this down; the serve-throughput smoke gate pins the drop."""
-        if not self.prefills:
-            return 0.0
-        return self.fresh_blocks / self.prefills
-
+from repro.serve.stats import EngineStats, ServeReport
 
 # ---------------------------------------------------------------------------
 # jitted programs (module level: one trace cache per (cfg, shapes))
@@ -573,56 +144,6 @@ class _PrefillProgress:
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class ServeReport:
-    """Outcome of one :meth:`ServeEngine.run`."""
-
-    sessions: dict[int, Session]
-    wall: float
-    decode_steps: int
-    prefills: int
-    stats: EngineStats | None = None
-
-    @property
-    def generated(self) -> int:
-        return sum(len(s.tokens) for s in self.sessions.values())
-
-    @property
-    def tok_per_s(self) -> float:
-        return self.generated / max(self.wall, 1e-9)
-
-    def tokens(self, rid: int) -> np.ndarray:
-        return np.asarray(self.sessions[rid].tokens, np.int32)
-
-    def _quantiles(self, values, qs) -> dict[float, float]:
-        vals = [v for v in values if v == v]       # drop NaN (in-flight)
-        if not vals:
-            return {q: 0.0 for q in qs}
-        return {q: float(np.quantile(vals, q)) for q in qs}
-
-    def latency_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
-        return self._quantiles((s.latency for s in self.sessions.values()), qs)
-
-    def ttft_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
-        """Submit-to-first-token, including time spent queued."""
-        return self._quantiles((s.ttft for s in self.sessions.values()), qs)
-
-    def ttft_step_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
-        """First-token engine-step index — TTFT in schedule depth.  On a
-        dispatch-bound smoke model wall TTFT is dominated by per-step sync
-        overhead; the step count is the deterministic quantity wall time
-        tracks once prefill compute actually dominates."""
-        return self._quantiles(
-            (float("nan") if s.step_first is None else float(s.step_first)
-             for s in self.sessions.values()), qs)
-
-    def queue_wait_quantiles(self, qs=(0.5, 0.95)) -> dict[float, float]:
-        """Submit-to-admission: the scheduling share of TTFT, separated so
-        prefill cost and queueing backpressure are distinguishable."""
-        return self._quantiles(
-            (s.queue_wait for s in self.sessions.values()), qs)
 
 
 class ServeEngine:
@@ -750,6 +271,16 @@ class ServeEngine:
         if cfg.is_encdec():
             self._encode_program = jax.jit(
                 lambda params, frames: lm.encode(cfg, params, frames))
+        # session migration (§17): slot/ids are device data, payload shapes
+        # are fixed by (cfg, geometry) — one trace each for the whole run
+        self._export_program = jax.jit(
+            lambda state, slot, rows: lm.export_slot(cfg, state, slot, rows))
+        self._import_program = jax.jit(
+            lambda state, slot, rows, payload: lm.import_slot(
+                cfg, state, slot, rows, payload),
+            donate_argnums=(0,))
+        self._gather_block_program = jax.jit(
+            lambda state, bid: lm.gather_block(cfg, state, bid))
 
     def _blocks_per_class(self, prompt_len: int,
                           max_new_tokens: int) -> dict[str, int]:
@@ -867,6 +398,182 @@ class ServeEngine:
     def prefix_caching(self) -> bool:
         """Whether prefix sharing is effectively on for this engine."""
         return self._prefix is not None
+
+    # -- session migration (DESIGN.md §17) -----------------------------------
+
+    def _require_paged(self, what: str) -> None:
+        if not self.paged:
+            raise RuntimeError(
+                f"{what} requires the block-paged layout: the dense layout "
+                "has no per-slot block addressing to extract state through")
+
+    def export_session(self, rid: int) -> dict:
+        """Lift a live admitted session out of the engine as a flat wire
+        tree: paged KV blocks gathered through the slot's table rows,
+        per-slot carries, position, generated tokens, chunked-prefill
+        progress and timing — everything the destination needs beyond the
+        :class:`Request` itself.  Pure read: the slot keeps running until
+        :meth:`release_migrated`.  Every leaf shape is a function of
+        (cfg, engine geometry, request) only, so the destination can derive
+        the restore spec via :meth:`export_spec` without trusting the wire.
+        """
+        self._require_paged("export_session")
+        session = self.sessions[rid]
+        slot = session.slot
+        if slot is None or slot not in self.pool.active:
+            raise RuntimeError(
+                f"request {rid} is not admitted; queued sessions migrate by "
+                "resubmission, finished ones by their tokens")
+        prog = self._prefilling.get(slot)
+        rows = {c: jnp.asarray(t[slot]) for c, t in self._tables.items()}
+        payload = self._export_program(self._state, jnp.int32(slot), rows)
+        req = session.request
+        toks = np.zeros((req.max_new_tokens,), np.int32)
+        toks[:len(session.tokens)] = session.tokens
+        meta = np.array([
+            req.rid, req.max_new_tokens, len(session.tokens),
+            int(self._active[slot]), int(prog is not None),
+            prog.next_chunk if prog is not None else 0,
+            prog.skip if prog is not None else 0,
+            int(self._tokens[slot, 0]),
+        ], np.int64)
+
+        def _t(v):
+            return np.nan if v is None else float(v)
+        times = np.array([session.t_submit, _t(session.t_admit),
+                          _t(session.t_first), _t(session.step_first),
+                          _t(session.t_done)], np.float64)
+        wire = {"meta": meta, "times": times, "tokens": toks,
+                "prompt": np.asarray(req.prompt, np.int32),
+                "state": jax.tree.map(np.asarray, payload)}
+        if req.ctx is not None:
+            wire["ctx"] = np.asarray(req.ctx)
+        return wire
+
+    def export_spec(self, request: Request) -> dict:
+        """Shape/dtype tree of :meth:`export_session`'s wire for this
+        engine's geometry — the ``like`` tree the migration checkpoint is
+        restored against (shapes come from (cfg, geometry, request), never
+        from the stored file)."""
+        self._require_paged("export_spec")
+        spec = {
+            "meta": jax.ShapeDtypeStruct((8,), np.int64),
+            "times": jax.ShapeDtypeStruct((5,), np.float64),
+            "tokens": jax.ShapeDtypeStruct((request.max_new_tokens,),
+                                           np.int32),
+            "prompt": jax.ShapeDtypeStruct(request.prompt.shape, np.int32),
+            "state": lm.export_slot_spec(self.cfg, self._state, self._widths),
+        }
+        if request.ctx is not None:
+            c = np.asarray(request.ctx)
+            spec["ctx"] = jax.ShapeDtypeStruct(c.shape, c.dtype)
+        return spec
+
+    def release_migrated(self, rid: int) -> None:
+        """Drop a session whose state has been exported elsewhere: free the
+        slot and its blocks without the finish-path side effects (no
+        finish_reason, no t_done, no prefix registration — the request is
+        still in flight, just not here).  Blocks this request's prefill
+        already registered as a donor stay cached: their pool contents are
+        untouched by release, so the index's content promise still holds."""
+        self._require_paged("release_migrated")
+        session = self.sessions.pop(rid)
+        slot = session.slot
+        self._prefilling.pop(slot, None)
+        self.pool.evict(slot)
+        self._active[slot] = False
+        self._tokens[slot] = 0
+        if self.blocks is not None:
+            self.blocks.free(rid)
+        for t in self._tables.values():
+            t[slot, :] = 0
+        self._dev_tables = None
+        self.stats.migrations_out += 1
+
+    def import_session(self, request: Request, wire: dict) -> Session:
+        """Re-admit an exported session token-identically: seat it in a
+        free slot, allocate fresh private blocks at this engine's table
+        widths, scatter the wire payload, and rebuild host bookkeeping —
+        including mid-flight chunked-prefill progress.  Shared/COW prefix
+        blocks arrive by value and re-register against *this* engine's
+        prefix index as the prefill advances.  Token identity needs the
+        same (cfg, s_max, block_size, prefill_chunk, temperature, seed) as
+        the source; geometry that differs only in slots/n_blocks is fine
+        (the schedule-independent (rid, step) seed contract)."""
+        self._require_paged("import_session")
+        rid = request.rid
+        if rid in self.sessions:
+            raise ValueError(f"duplicate request id {rid}")
+        meta = np.asarray(wire["meta"])
+        if int(meta[0]) != rid:
+            raise ValueError(
+                f"wire is for request {int(meta[0])}, not {rid}")
+        if not np.array_equal(np.asarray(wire["prompt"]),
+                              np.asarray(request.prompt)):
+            raise ValueError(f"request {rid}: wire prompt differs from the "
+                             "submitted prompt")
+        p_len = request.prompt.shape[0]
+        if p_len + request.max_new_tokens - 1 > self.s_max:
+            raise ValueError(f"request {rid} does not fit s_max={self.s_max}")
+        if not self.pool.free_slots:
+            raise RuntimeError("import_session: no free slot")
+        per = self._blocks_per_class(p_len, request.max_new_tokens)
+        if self.blocks is not None:
+            if sum(per.values()) > self.blocks.reclaimable:
+                raise RuntimeError("import_session: not enough free blocks")
+        n_tok = int(meta[2])
+        session = Session(request, t_submit=float(wire["times"][0]))
+        session.tokens = [int(t) for t in np.asarray(wire["tokens"])[:n_tok]]
+
+        def _t(v):
+            return None if np.isnan(v) else float(v)
+        times = np.asarray(wire["times"])
+        session.t_admit = _t(times[1])
+        session.t_first = _t(times[2])
+        session.step_first = (None if np.isnan(times[3])
+                              else int(times[3]))
+        slot = self.pool.free_slots[0]
+        self.pool.place(session, slot)
+        self.sessions[rid] = session
+        if self.blocks is not None:
+            fresh = {c: self._alloc_blocks(rid, n) for c, n in per.items()}
+            for c, ids in fresh.items():
+                row = self._tables[c][slot]
+                row[:] = 0
+                row[:len(ids)] = ids
+            self.stats.fresh_blocks += sum(len(v) for v in fresh.values())
+            self.stats.observe_blocks(self.blocks.in_use)
+        self._dev_tables = None
+        rows = {c: jnp.asarray(t[slot]) for c, t in self._tables.items()}
+        payload = jax.tree.map(jnp.asarray, wire["state"])
+        self._state = self._import_program(self._state, jnp.int32(slot),
+                                           rows, payload)
+        self._tokens[slot, 0] = int(meta[7])
+        self._active[slot] = bool(meta[3])
+        if bool(meta[4]):           # mid-chunked-prefill: rebuild progress
+            skip, next_chunk = int(meta[6]), int(meta[5])
+            c = self.prefill_chunk
+            n_suffix = p_len - skip
+            n_chunks = -(-n_suffix // c)
+            padded = np.zeros((n_chunks * c,), np.int32)
+            padded[:n_suffix] = request.prompt[skip:]
+            chain = ([] if self._prefix is None
+                     else self._prefix.chain(request.prompt, request.ctx))
+            self._prefilling[slot] = _PrefillProgress(
+                session=session, padded=padded, p_len=n_suffix,
+                n_chunks=n_chunks, next_chunk=next_chunk,
+                ctx=self._ctx_for(request),
+                seeds=jnp.asarray([self._seed_for(rid, 0)], jnp.int32),
+                rows=self._slot_table_rows(slot), skip=skip, chain=chain)
+        self.stats.migrations_in += 1
+        return session
+
+    def gather_block(self, bid: int):
+        """Host copy of physical block ``bid`` across every shared pool —
+        the scrubber's unit of verification for idle cached blocks."""
+        self._require_paged("gather_block")
+        out = self._gather_block_program(self._state, jnp.int32(bid))
+        return jax.tree.map(np.asarray, out)
 
     def _prefix_plan(self, req: Request) -> tuple[list[int], int, int | None]:
         """``(shared, skip, cow_src)`` for one request: which cached blocks

@@ -30,7 +30,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.serve.scheduler import ServeEngine
+from repro.serve.engine import ServeEngine
 from repro.serve.session import Request, TranscriptStream
 
 

@@ -1,0 +1,170 @@
+"""Unit tests for the fault-tolerance primitives (distributed/fault.py):
+the straggler watermark policy and the restartable Runner loop — the
+pieces the replicated serve router (DESIGN.md §17) reuses for replica
+heartbeats and the migration checkpoint machinery sits beside."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.distributed.fault import Runner, StragglerPolicy
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy.observe
+# ---------------------------------------------------------------------------
+
+
+def test_policy_warmup_is_always_ok():
+    """Fewer than 5 samples: no watermark yet, everything is "ok" — even a
+    grossly slow step (no median to compare against)."""
+    p = StragglerPolicy()
+    assert [p.observe(s, dt) for s, dt in
+            enumerate([0.01, 0.01, 5.0, 0.01])] == ["ok"] * 4
+    assert p.events == [] and p.strikes == 0
+
+
+def test_policy_flags_slow_step_against_trailing_median():
+    p = StragglerPolicy(straggler_factor=2.0)
+    for s in range(6):
+        assert p.observe(s, 0.01) == "ok"
+    # 0.05 > 2.0 * median(0.01) -> straggler, with the event recorded
+    assert p.observe(6, 0.05) == "straggler"
+    assert p.strikes == 1
+    [(step, dt, med)] = p.events
+    assert step == 6 and dt == 0.05 and med == pytest.approx(0.01)
+
+
+def test_policy_fast_step_within_factor_is_ok():
+    p = StragglerPolicy(straggler_factor=2.0)
+    for s in range(6):
+        p.observe(s, 0.01)
+    # exactly at the threshold is NOT a straggler (strict >)
+    assert p.observe(6, 0.02) == "ok"
+    assert p.strikes == 0
+
+
+def test_policy_reshard_after_max_strikes_then_resets():
+    p = StragglerPolicy(straggler_factor=2.0, max_strikes=3, window=50)
+    for s in range(20):
+        p.observe(s, 0.01)
+    verdicts = [p.observe(100 + i, 0.05) for i in range(3)]
+    assert verdicts == ["straggler", "straggler", "reshard"]
+    # the reshard consumed the strikes: the counter starts over
+    assert p.strikes == 0
+    assert p.observe(200, 0.05) == "straggler"
+    assert len(p.events) == 4         # every strike logged, reshard included
+
+
+def test_policy_window_bounds_the_memory():
+    p = StragglerPolicy(window=5)
+    for s in range(100):
+        p.observe(s, 0.01)
+    assert len(p._times) == 5
+
+
+def test_policy_median_excludes_current_sample():
+    """The watermark is the *trailing* median: a slow step must not dilute
+    the median it is judged against (with itself included a single huge
+    sample could mask itself at small windows)."""
+    p = StragglerPolicy(straggler_factor=2.0, window=5)
+    for s in range(5):
+        p.observe(s, 0.01)
+    p.observe(5, 10.0)
+    assert p.events[-1][2] == pytest.approx(0.01)
+
+
+# ---------------------------------------------------------------------------
+# Runner: resume_or_init / maybe_save cadence / _gc retention
+# ---------------------------------------------------------------------------
+
+
+def _state(v: float):
+    return {"w": np.full((4,), v, np.float32),
+            "b": np.arange(3, dtype=np.int32)}
+
+
+def _like():
+    import jax
+
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                        _state(0.0))
+
+
+def test_runner_init_when_empty(tmp_path):
+    r = Runner(str(tmp_path / "ckpt"))
+    state, step = r.resume_or_init(_like(), lambda: _state(7.0))
+    assert step == 0
+    np.testing.assert_array_equal(state["w"], _state(7.0)["w"])
+
+
+def test_runner_maybe_save_cadence(tmp_path):
+    r = Runner(str(tmp_path), save_every=10)
+    saved = [s for s in range(1, 35) if r.maybe_save(s, _state(float(s)))]
+    assert saved == [10, 20, 30]
+    assert r._steps() == [10, 20, 30]
+
+
+def test_runner_resumes_latest(tmp_path):
+    r = Runner(str(tmp_path), save_every=10)
+    for s in (10, 20, 30):
+        r.maybe_save(s, _state(float(s)))
+    state, step = r.resume_or_init(_like(), lambda: _state(0.0))
+    assert step == 30
+    np.testing.assert_array_equal(state["w"], _state(30.0)["w"])
+
+
+def test_runner_falls_back_past_corrupt_checkpoint(tmp_path):
+    """A truncated latest npz reads as a failed node: resume falls back one
+    checkpoint instead of wedging or replaying from scratch."""
+    r = Runner(str(tmp_path), save_every=10)
+    for s in (10, 20):
+        r.maybe_save(s, _state(float(s)))
+    (tmp_path / "ckpt_00000020.npz").write_bytes(b"garbage")
+    state, step = r.resume_or_init(_like(), lambda: _state(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(state["w"], _state(10.0)["w"])
+
+
+def test_runner_falls_back_to_init_when_all_corrupt(tmp_path):
+    r = Runner(str(tmp_path), save_every=10)
+    r.maybe_save(10, _state(10.0))
+    (tmp_path / "ckpt_00000010.npz").write_bytes(b"garbage")
+    state, step = r.resume_or_init(_like(), lambda: _state(-1.0))
+    assert step == 0
+    np.testing.assert_array_equal(state["w"], _state(-1.0)["w"])
+
+
+def test_runner_gc_keeps_last_k(tmp_path):
+    r = Runner(str(tmp_path), save_every=1, keep_last=3)
+    for s in range(1, 8):
+        r.maybe_save(s, _state(float(s)))
+    assert r._steps() == [5, 6, 7]
+    # manifests garbage-collect together with their npz
+    manifests = sorted(f.name for f in tmp_path.glob("manifest_*.msgpack"))
+    assert manifests == [f"manifest_{s:08d}.msgpack" for s in (5, 6, 7)]
+    # the survivors stay restorable
+    state, step = ckpt.restore(str(tmp_path), None, _like())
+    assert step == 7
+
+
+def test_runner_encrypted_roundtrip(tmp_path):
+    """root_key threads through save and resume (the serve router's
+    migration checkpoints ride the same keyed path)."""
+    r = Runner(str(tmp_path), save_every=1, root_key="runner-key")
+    r.maybe_save(1, _state(3.0))
+    state, step = r.resume_or_init(_like(), lambda: _state(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(state["w"], _state(3.0)["w"])
+    # wrong key: decrypt garbage fails parity -> falls back to init
+    r2 = Runner(str(tmp_path), save_every=1, root_key="wrong-key")
+    state, step = r2.resume_or_init(_like(), lambda: _state(-2.0))
+    assert step == 0
+    np.testing.assert_array_equal(state["w"], _state(-2.0)["w"])
+
+
+def test_runner_observe_step_delegates_to_policy(tmp_path):
+    r = Runner(str(tmp_path), policy=StragglerPolicy(straggler_factor=2.0))
+    for s in range(6):
+        assert r.observe_step(s, 0.01) == "ok"
+    assert r.observe_step(6, 0.1) == "straggler"

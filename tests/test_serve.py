@@ -205,6 +205,45 @@ def test_engine_submit_validation():
         Request(rid=2, prompt=np.arange(4), max_new_tokens=0)
 
 
+def test_report_quantiles_nan_safe_with_nothing_finished():
+    """A report over only in-flight (or zero) sessions must answer every
+    quantile helper with NaN — never raise, and never a fake 0.0 that a
+    dashboard or CI gate would read as "instant".  The replicated router
+    aggregates per-replica reports mid-drill, where a replica can
+    legitimately have nothing finished yet."""
+    from repro.serve import ServeReport
+
+    live = Session(Request(rid=0, prompt=np.arange(4), max_new_tokens=3),
+                   t_submit=100.0)     # never admitted, never finished
+    for sessions in ({}, {0: live}):
+        rep = ServeReport(sessions=sessions, wall=0.5, decode_steps=0,
+                          prefills=0)
+        for qs in (rep.latency_quantiles(), rep.ttft_quantiles(),
+                   rep.ttft_step_quantiles(), rep.queue_wait_quantiles()):
+            assert set(qs) == {0.5, 0.95}
+            assert all(np.isnan(v) for v in qs.values()), (sessions, qs)
+    assert rep.generated == 0 and rep.tok_per_s == 0.0
+
+
+def test_report_quantiles_ignore_in_flight_sessions():
+    """Finished sessions dominate the quantiles; in-flight ones (NaN
+    latency/ttft) are dropped from the sample, not poisoning it."""
+    from repro.serve import ServeReport
+
+    done = Session(Request(rid=1, prompt=np.arange(4), max_new_tokens=2),
+                   t_submit=10.0)
+    done.t_admit, done.t_first, done.t_done = 11.0, 12.0, 14.0
+    done.finish_reason = "length"
+    live = Session(Request(rid=2, prompt=np.arange(4), max_new_tokens=2),
+                   t_submit=10.0)
+    rep = ServeReport(sessions={1: done, 2: live}, wall=1.0,
+                      decode_steps=0, prefills=0)
+    lat = rep.latency_quantiles()
+    assert lat[0.5] == pytest.approx(4.0) and lat[0.95] == pytest.approx(4.0)
+    assert rep.ttft_quantiles()[0.5] == pytest.approx(2.0)
+    assert rep.queue_wait_quantiles()[0.5] == pytest.approx(1.0)
+
+
 def test_generate_wrapper_matches_static_loop():
     """serve_step.generate (now an engine wrapper) is token-identical to
     the historical static-batch loop for greedy decoding."""
