@@ -19,9 +19,9 @@ import sys
 import traceback
 
 from benchmarks import (bank_scaling, fig4_functional, fig5_montecarlo,
-                        fig6_xnornet, incremental_verify, roofline_bench,
-                        serve_replicated, serve_throughput, serve_workloads,
-                        table1_latency, verify_throughput)
+                        fig6_xnornet, incremental_verify, paged_decode_bench,
+                        roofline_bench, serve_replicated, serve_throughput,
+                        serve_workloads, table1_latency, verify_throughput)
 
 SUITES = [
     ("fig4", fig4_functional),
@@ -34,6 +34,7 @@ SUITES = [
     ("serve", serve_throughput),
     ("workloads", serve_workloads),
     ("replicated", serve_replicated),
+    ("paged_decode", paged_decode_bench),
     ("roofline", roofline_bench),
 ]
 

@@ -28,8 +28,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels import online_softmax as osm
 
-NEG_INF = -1e30
+NEG_INF = osm.NEG_INF
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -39,9 +40,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(kstep == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        osm.init(m_ref, l_ref, acc_ref)
 
     q = q_ref[0].astype(jnp.float32)                  # (bq, dh)
     k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
@@ -53,21 +52,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         qpos = qstep * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(kpos <= qpos, s, NEG_INF)
-
-    m_prev = m_ref[...]                               # (bq, 1)
-    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                            # (bq, bk)
-    corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
-    acc_ref[...] = (acc_ref[...] * corr
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                          preferred_element_type=jnp.float32))
-    m_ref[...] = m_new
+        # tiles strictly above the causal diagonal are fully masked: their
+        # update is an exact no-op (p == 0, corr == 1), so skip the work.
+        # The k axis walks left-to-right, so tile (q, 0) is never all-masked
+        # and the online_softmax all-NEG_INF edge case cannot arise here.
+        @pl.when(kstep * bk <= qstep * bq + (bq - 1))
+        def _update():
+            osm.update(s, v, m_ref, l_ref, acc_ref)
+    else:
+        osm.update(s, v, m_ref, l_ref, acc_ref)
 
     @pl.when(kstep == pl.num_programs(2) - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        o_ref[0] = osm.finish(m_ref, l_ref, acc_ref).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",

@@ -1,0 +1,62 @@
+"""Shared online-softmax (m, l, acc) accumulator for fused attention kernels.
+
+One streaming pass over key tiles maintains, per query row,
+
+  m    running max of the masked scores seen so far,
+  l    running sum of exp(score - m),
+  acc  running sum of exp(score - m) @ V,
+
+with the Dao et al. FA-2 correction ``exp(m_prev - m_new)`` rescaling the
+stale l/acc whenever a new tile raises the max.  ``finish`` normalizes:
+``acc / l`` equals plain masked softmax(scores) @ V exactly in real
+arithmetic (floating-point results differ only in rounding/association —
+which is why the model-level dispatch keeps a bit-exact jnp twin, DESIGN.md
+§18).
+
+Both fused kernels import these helpers instead of hand-copying the
+recurrence: :mod:`repro.kernels.flash_attn` (grid-tiled prefill attention)
+and :mod:`repro.kernels.paged_attn` (block-table paged decode).  The
+helpers operate on Pallas refs — ``m_ref``/``l_ref`` are ``(rows, 1)`` f32
+VMEM scratch, ``acc_ref`` is ``(rows, dh)`` f32 VMEM scratch — and are
+ordinary jnp code, so they also run under ``interpret=True`` and inside
+the pure-jnp reference twins.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30   # masking constant shared with models/attention.py
+
+
+def init(m_ref, l_ref, acc_ref) -> None:
+    """Reset the accumulator at the first key tile of a query row."""
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def update(s: jnp.ndarray, v: jnp.ndarray, m_ref, l_ref, acc_ref) -> None:
+    """Fold one masked score tile ``s`` (rows, bk) f32 and its value tile
+    ``v`` (bk, dh) into the running (m, l, acc).
+
+    Masked-out scores must already be ``NEG_INF``; a tile whose rows are
+    *entirely* masked must be skipped by the caller (``exp(NEG_INF -
+    NEG_INF) == 1`` would poison l/acc while m is still at its initial
+    value — the classic online-softmax edge case).
+    """
+    m_prev = m_ref[...]                                   # (rows, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (rows, bk)
+    corr = jnp.exp(m_prev - m_new)                        # (rows, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+
+def finish(m_ref, l_ref, acc_ref) -> jnp.ndarray:
+    """Normalize after the last tile: (rows, dh) f32 attention output."""
+    return acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)

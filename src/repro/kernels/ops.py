@@ -38,6 +38,32 @@ def _resolve(impl: str) -> str:
     return impl
 
 
+def fused_mode(mode: str = "auto") -> str:
+    """Resolve the fused-decode dispatch: ``"kernel"`` or ``"ref"``.
+
+    ``"kernel"`` routes the decode hot path through the single-dispatch
+    Pallas kernels (paged_attn / the fused packed linear); ``"ref"`` keeps
+    the unfused jnp chain, which is the kernels' bit-exact reference twin
+    (DESIGN.md §18).  ``"auto"`` picks the kernel exactly when the base
+    dispatch resolves to real-TPU pallas — on ref/interpret backends the
+    chain stays unfused so every cross-layout token pin (paged == dense,
+    prefix on == off, migration identity) remains bitwise across both
+    ``REPRO_KERNEL_IMPL`` CI modes.  The ``REPRO_FUSED_DECODE`` env var
+    (read per call, so tests can monkeypatch) overrides ``mode``:
+    on/kernel/fused force the kernel, off/ref/unfused force the chain.
+    """
+    mode = os.environ.get("REPRO_FUSED_DECODE", "") or mode
+    if mode in ("on", "kernel", "fused"):
+        return "kernel"
+    if mode in ("off", "ref", "unfused"):
+        return "ref"
+    if mode != "auto":
+        raise ValueError(
+            f"unknown fused-decode mode {mode!r} (from REPRO_FUSED_DECODE or"
+            " cfg.fused_decode); expected auto|on|kernel|fused|off|ref|unfused")
+    return "kernel" if _resolve("auto") == "pallas" else "ref"
+
+
 def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
     pad = (-x.shape[0]) % mult
     return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
@@ -107,6 +133,34 @@ def binarize(x: jnp.ndarray, impl: str = "auto", bm: int = 256):
         # kernel alpha averaged over padded K; rescale to true K.
         alpha = alpha * (x2.shape[1] / k)
     return planes.reshape(*lead, -1), alpha.reshape(lead)
+
+
+def xnor_linear_fused(x: jnp.ndarray, pb: jnp.ndarray, beta: jnp.ndarray,
+                      valid_k: int, impl: str = "auto", bm: int = 128,
+                      bn: int = 128) -> jnp.ndarray:
+    """Single-dispatch packed linear: binarize + XNOR GEMM + alpha/beta.
+
+    ``x``: (M, K) activations, ``pb``: (N, Kw) prepacked weight planes,
+    ``beta``: (N,) weight scales; returns (M, N) f32.  The unfused chain
+    (``binarize`` -> ``xnor_matmul`` -> scale) materializes the packed
+    activation planes and the int32 dots in HBM between dispatches; here
+    they live and die inside one kernel.  ``impl="ref"`` runs the pure-jnp
+    oracle (bit-identical to the unfused ref chain).
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.xnor_linear_fused(x, pb, beta, valid_k)
+    m, n = x.shape[0], pb.shape[0]
+    # column pads are 0.0: they pack to 1-bits, matching pb's word-tail pad
+    # bits, so the kernel's valid_k accounting stays exact (see _fused_kernel)
+    xp = _pad_cols(x, bitpack.WORD)
+    bm, bn = min(bm, m), min(bn, n)
+    xp, pb2 = _pad_rows(xp, bm), _pad_rows(pb, bn)
+    beta2 = jnp.pad(beta, (0, pb2.shape[0] - n))
+    out = _xnor_gemm.xnor_linear_fused(xp, pb2, beta2, valid_k=valid_k,
+                                       bm=bm, bn=bn,
+                                       interpret=(impl == "interpret"))
+    return out[:m, :n]
 
 
 def digest(buf: jnp.ndarray, digest_width: int = 128, impl: str = "auto",

@@ -55,6 +55,63 @@ def pack(x: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# Fused paged-decode attention (kernels/paged_attn.py, DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+def paged_decode(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
+                 table: jnp.ndarray, pos: jnp.ndarray, *, window: int = 0,
+                 scale: float = 1.0, out_scale: float = 1.0) -> jnp.ndarray:
+    """One-shot masked-softmax oracle for the fused paged decode kernel.
+
+    Same semantics as the C == 1 path of ``models/attention.py::
+    paged_attention`` after the scatter: gather the pool through the block
+    table, score, mask (monotone or window-ring), softmax, PV.  ``q`` is
+    (B, KV, G, dh); ``ck``/``cv`` are the (n_blocks, KV, bs, dh) pool
+    (any dtype incl. int8 — decoded to f32 here, the fixed-point factors
+    arrive folded into ``scale``/``out_scale``); returns (B, KV, G, dh)
+    in q.dtype.
+    """
+    b, kv, g, dh = q.shape
+    bs = ck.shape[2]
+    cap = table.shape[1] * bs
+    gk = jnp.moveaxis(ck[table], 1, 2).reshape(b, kv, cap, dh)
+    gv = jnp.moveaxis(cv[table], 1, 2).reshape(b, kv, cap, dh)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   gk.astype(jnp.float32)) * scale
+    kslot = jnp.arange(cap, dtype=jnp.int32)
+    p = pos[:, None]
+    if window:
+        age = (p % cap - kslot[None]) % cap
+        valid = age < jnp.minimum(window, p + 1)
+    else:
+        valid = kslot[None] <= p
+    s = jnp.where(valid[:, None, None, :], s, jnp.float32(-1e30))
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, gv.astype(jnp.float32))
+    return (out * out_scale).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused prepacked XNOR linear (binarize + popcount GEMM + alpha/beta epilogue)
+# ---------------------------------------------------------------------------
+
+def xnor_linear_fused(x: jnp.ndarray, pb: jnp.ndarray, beta: jnp.ndarray,
+                      valid_k: int) -> jnp.ndarray:
+    """Oracle for the fused packed linear: the exact unfused chain.
+
+    ``x``: (M, K) activations, ``pb``: (N, Kw) prepacked weight bit-planes,
+    ``beta``: (N,) weight scales.  Returns (M, N) f32 =
+    (valid_k - 2*popcount) * alpha * beta with alpha = mean|x| per row —
+    bit-for-bit what binarize -> xnor_gemm -> scale produces unfused
+    (alpha stays in x.dtype exactly as the layer computes it).
+    """
+    alpha = jnp.mean(jnp.abs(x), axis=-1)
+    pa = bitpack.pack_bits(bitpack.pad_to_word(x))
+    dots = xnor_gemm(pa, pb, valid_k).astype(jnp.float32)
+    return dots * alpha[:, None] * beta[None, :]
+
+
+# ---------------------------------------------------------------------------
 # Bulk XOR/XNOR (the banked engine's row-pair cycle, DESIGN.md §10)
 # ---------------------------------------------------------------------------
 

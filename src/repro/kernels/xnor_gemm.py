@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitpack import WORD
 from repro.kernels import compat
 
 
@@ -90,3 +91,73 @@ def xnor_gemm(pa: jnp.ndarray, pb: jnp.ndarray, *, valid_k: int,
         interpret=interpret,
     )(pa, pb)
     return jnp.int32(valid_k) - 2 * popc
+
+
+# ---------------------------------------------------------------------------
+# Fused prepacked linear: binarize + popcount GEMM + alpha/beta epilogue
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(x_ref, b_ref, beta_ref, o_ref, *, valid_k: int):
+    """One (bm, bn) f32 output tile of the fused packed linear.
+
+    The real-valued activation block is read from HBM exactly once: its sign
+    bits are packed in-register (the pack.py idiom), the packed words stream
+    through the XOR+popcount loop, and the XNOR-Net epilogue
+    ``(valid_k - 2*popc) * alpha * beta`` lands in the same pass — no packed
+    activation plane or int32 dot tensor ever round-trips HBM.
+    """
+    x = x_ref[...].astype(jnp.float32)                      # (bm, Kp)
+    bm, kp = x.shape
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, kp // WORD, WORD)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD), 2)
+    pa = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)  # (bm, Kw)
+    b = b_ref[...]                                           # (bn, Kw)
+
+    def body(w, acc):
+        aw = jax.lax.dynamic_slice_in_dim(pa, w, 1, axis=1)  # (bm, 1)
+        bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)   # (bn, 1)
+        xw = jnp.bitwise_xor(aw, bw.reshape(1, -1))          # (bm, bn)
+        return acc + jax.lax.population_count(xw).astype(jnp.int32)
+
+    popc = jax.lax.fori_loop(
+        0, b.shape[1], body, jnp.zeros(o_ref.shape, jnp.int32))
+    # column pads of x are 0.0 -> sign bit 1, matching pb's word-tail pad
+    # bits (prepacking zero-pads, 0 >= 0 -> 1): pads XOR to 0, so the
+    # valid_k accounting removes their +1 dot bias exactly (ref.xnor_gemm).
+    dots = (jnp.int32(valid_k) - 2 * popc).astype(jnp.float32)
+    # 0.0 pads are |.|-neutral, so sum/valid_k is the true-row-length mean.
+    alpha = jnp.sum(jnp.abs(x), axis=-1, keepdims=True) / valid_k
+    o_ref[...] = dots * alpha * beta_ref[...]                # beta: (1, bn)
+
+
+@functools.partial(jax.jit, static_argnames=("valid_k", "bm", "bn",
+                                             "interpret"))
+def xnor_linear_fused(x: jnp.ndarray, pb: jnp.ndarray, beta: jnp.ndarray, *,
+                      valid_k: int, bm: int = 128, bn: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Fused packed linear: (M, Kp) float x (N, Kw) packed -> (M, N) f32.
+
+    Requires M % bm == N % bn == 0 and Kp == Kw * 32 (ops.xnor_linear_fused
+    pads arbitrary shapes).  Grid is (M/bm, N/bn) with K unblocked — a full
+    activation row must be visible in one step to compute alpha alongside
+    the dot (same constraint as pack.py); per-step VMEM is the (bm, Kp) f32
+    activation block + (bn, Kw) u32 weight planes + the (bm, bn) tile.
+    """
+    m, kp = x.shape
+    n, kw = pb.shape
+    assert kp == kw * WORD and m % bm == 0 and n % bn == 0, (x.shape, pb.shape)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, valid_k=valid_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, pb, beta.astype(jnp.float32).reshape(1, -1))

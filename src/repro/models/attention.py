@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.ctx import constrain
+from repro.kernels import ops, paged_attn
 from repro.models import layers
 from repro.models.params import ParamDef
 
@@ -397,13 +398,29 @@ def paged_attention(cfg, p: dict, x: jnp.ndarray, cache: PagedKVCache,
     ck = cache.k.at[phys, :, off].set(k.astype(cache.k.dtype))
     cv = cache.v.at[phys, :, off].set(v.astype(cache.v.dtype))
 
+    scale = cfg.d_head ** -0.5
+    if i8:
+        scale = scale / cfg.kv_i8_scale
+    if c == 1 and ops.fused_mode(cfg.fused_decode) == "kernel":
+        # single-dispatch decode: the Pallas kernel walks the block table via
+        # scalar prefetch and streams pool blocks through VMEM (DESIGN.md
+        # §18) — the gather/mask/softmax/PV chain below is its reference
+        # twin (exact in real arithmetic, allclose in floats), kept as the
+        # production path on ref/interpret backends so cross-layout token
+        # pins stay bitwise.  Chunked prefill (c > 1) always takes the
+        # unfused path.
+        out = paged_attn.paged_decode_attention(
+            q[:, 0], ck, cv, table, qpos[:, 0], window=window,
+            scale=float(scale),
+            out_scale=float(1.0 / cfg.kv_i8_scale) if i8 else 1.0,
+            interpret=ops._resolve("auto") != "pallas")
+        out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+        return layers.linear(out, p["wo"], cfg.quant), PagedKVCache(ck, cv)
+
     gk = jnp.moveaxis(ck[table], 1, 2).reshape(b, cfg.n_kv_heads, cap,
                                                cfg.d_head)
     gv = jnp.moveaxis(cv[table], 1, 2).reshape(b, cfg.n_kv_heads, cap,
                                                cfg.d_head)
-    scale = cfg.d_head ** -0.5
-    if i8:
-        scale = scale / cfg.kv_i8_scale
     scores = jnp.einsum("bqkgd,bksd->bkgqs", q, gk.astype(q.dtype),
                         preferred_element_type=jnp.float32) * scale
     kslot = jnp.arange(cap)[None, None, :]

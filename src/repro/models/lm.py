@@ -219,6 +219,23 @@ def paged_table_widths(cfg, s_max: int, block_size: int,
     return widths
 
 
+def paged_decode_layer_classes(cfg) -> dict:
+    """Paged decoder layers per block-table class.
+
+    The roofline floor for a decode step streams each paged layer's live
+    K/V once (``analysis.decode_roofline_bytes``); this is the layer-count
+    side of that accounting, derived from the same BlockContract registry
+    as :func:`paged_table_widths` so the two can never disagree about
+    which layers are paged.
+    """
+    counts: dict[str, int] = {}
+    for kind, n in cfg.segments():
+        c = registry.contract(kind)
+        if c.paged_kv:
+            counts[c.table_class] = counts.get(c.table_class, 0) + n
+    return counts
+
+
 def paged_decode_state_spec(cfg, batch: int, s_max: int, *, n_blocks: int,
                             block_size: int, abstract: bool = True):
     """The block-paged resident serving state (DESIGN.md §14).

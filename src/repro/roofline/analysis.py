@@ -148,6 +148,56 @@ def roofline(compiled, model_flops: float | None = None) -> dict:
     return out
 
 
+def dispatch_count(jaxpr) -> int:
+    """Primitive dispatches in a traced program (jaxpr or ClosedJaxpr).
+
+    Call-like primitives (pjit, scan bodies, cond branches, ...) are
+    descended into — they are program structure, not dispatches — while a
+    ``pallas_call`` counts as exactly one: the whole fused kernel is a
+    single device dispatch regardless of how much work its body folds in.
+    This is the metric behind the "fused decode is one dispatch where the
+    chain was N" CI gate (the unfused gather/mask/softmax/PV chain counts
+    its gather, einsums, reductions and elementwise stages individually).
+    """
+    if hasattr(jaxpr, "jaxpr"):          # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+            continue
+        subs = []
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            subs += [s for s in vs
+                     if hasattr(s, "eqns") or hasattr(s, "jaxpr")]
+        n += sum(dispatch_count(s) for s in subs) if subs else 1
+    return n
+
+
+def decode_roofline_bytes(*, param_bytes: int, widths: dict,
+                          layers_per_class: dict, slots: int,
+                          block_size: int, n_kv_heads: int, d_head: int,
+                          kv_itemsize: int, io_bytes: int = 0) -> int:
+    """Analytic minimum HBM bytes for one paged decode step.
+
+    A decode step cannot move less than: every live parameter byte once
+    (batch=slots shares one weight read), plus one streaming pass over the
+    table-addressed K/V working set — per paged layer, ``slots`` tables of
+    ``W`` blocks of ``block_size x n_kv_heads x d_head`` elements, K and V
+    (the x2).  ``io_bytes`` covers tokens/logits/state I/O (small).  The
+    achieved/roofline ratio reported by the serve benchmarks compares the
+    compiled program's ``bytes accessed`` against this floor — gather
+    materialization, score round-trips and scatter copies all show up as
+    achieved bytes above it.
+    """
+    kv = 0
+    for cls, w in widths.items():
+        kv += (layers_per_class.get(cls, 0) * slots * w * block_size
+               * n_kv_heads * d_head * kv_itemsize * 2)
+    return int(param_bytes + kv + io_bytes)
+
+
 def format_row(name: str, r: dict) -> str:
     mf = r.get("roofline_frac")
     return (f"| {name} | {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f}"

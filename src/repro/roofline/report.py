@@ -63,6 +63,30 @@ def roofline_table(cells, mesh="single") -> str:
     return "\n".join(lines)
 
 
+def serve_decode_header() -> str:
+    """Header for :func:`serve_decode_row` tables."""
+    return ("| decode path | achieved bytes | roofline bytes | % of peak "
+            "| dispatches |\n|---|---|---|---|---|")
+
+
+def serve_decode_row(name: str, r: dict) -> str:
+    """One serve-decode roofline line: achieved vs. analytic-minimum bytes.
+
+    ``r`` is an ``analysis.roofline`` dict augmented with ``roofline_bytes``
+    (from ``analysis.decode_roofline_bytes``) and optionally ``dispatches``.
+    "% of peak" is roofline/achieved — 100% means the program moves exactly
+    the analytic floor.  Both serve benchmarks render through here so the
+    achieved-vs-roofline columns in BENCH_serve.json and the human tables
+    can never drift apart.
+    """
+    achieved = float(r.get("hlo_bytes_per_chip", 0.0))
+    floor = float(r.get("roofline_bytes", 0.0))
+    pct = 100.0 * floor / achieved if achieved else 0.0
+    disp = r.get("dispatches")
+    return (f"| {name} | {achieved:.3e} | {floor:.3e} | {pct:.1f}% "
+            f"| {disp if disp is not None else '—'} |")
+
+
 def summarize(cells):
     by = defaultdict(int)
     for r in cells.values():

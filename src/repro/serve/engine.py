@@ -810,6 +810,52 @@ class ServeEngine:
                                 for c, t in self._tables.items()}
         return self._dev_tables
 
+    def decode_roofline(self) -> dict:
+        """AOT roofline audit of this engine's decode step (nothing runs).
+
+        Re-traces the paged decode step side-effect-free on abstract avals
+        (so ``decode_traces``, which pins real program compilations, is
+        untouched), compiles it ahead-of-time, and returns the
+        ``analysis.roofline`` dict augmented with the analytic per-step
+        byte floor (``roofline_bytes``), ``achieved_bytes`` and the jaxpr
+        ``dispatches`` count — which is also recorded in
+        ``stats.decode_dispatches``.  The serve benchmarks render this via
+        ``report.serve_decode_row``; the fused/unfused comparison is the
+        same engine audited under different ``cfg.fused_decode`` settings.
+        """
+        if not self.paged:
+            raise ValueError("decode_roofline needs the paged layout")
+        from repro.roofline import analysis
+        cfg, temperature = self.cfg, self.temperature
+
+        def fn(params, tokens, state, tables, active, key, seeds):
+            logits, state = lm.paged_decode_step(cfg, params, tokens, state,
+                                                 tables, active=active)
+            return (_sample_tokens(cfg, logits, key, seeds, temperature),
+                    state)
+
+        args = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (self.params, jnp.asarray(self._tokens), self._state,
+             self._device_tables(), jnp.asarray(self._active), self._key,
+             jnp.zeros((self.slots,), jnp.int32)))
+        self.stats.decode_dispatches = analysis.dispatch_count(
+            jax.make_jaxpr(fn)(*args))
+        r = analysis.roofline(jax.jit(fn).lower(*args).compile())
+        param_bytes = sum(x.size * jnp.dtype(x.dtype).itemsize
+                          for x in jax.tree_util.tree_leaves(self.params))
+        kv_itemsize = (1 if cfg.kv_cache_dtype == "i8"
+                       else jnp.dtype(cfg.dtype).itemsize)
+        r["roofline_bytes"] = analysis.decode_roofline_bytes(
+            param_bytes=param_bytes, widths=self._widths,
+            layers_per_class=lm.paged_decode_layer_classes(cfg),
+            slots=self.slots, block_size=self.block_size,
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            kv_itemsize=kv_itemsize)
+        r["achieved_bytes"] = r["hlo_bytes_per_chip"]
+        r["dispatches"] = self.stats.decode_dispatches
+        return r
+
     def _decode_once(self) -> None:
         """One batched decode step; append/evict per active slot (slots
         still mid-prefill ride along inertly and are skipped here)."""

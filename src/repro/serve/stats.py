@@ -32,6 +32,9 @@ class EngineStats:
     prefill_chunks: int = 0
     prefill_traces: int = 0
     decode_traces: int = 0
+    decode_dispatches: int = 0  # jaxpr dispatch count of the decode step
+                                # (recorded by ServeEngine.decode_roofline;
+                                # 0 until an audit runs)
     blocks_total: int = 0       # allocatable blocks (0: dense layout)
     blocks_in_use: int = 0
     blocks_peak: int = 0
